@@ -1,0 +1,37 @@
+"""E11 (beyond paper) — the paper's DSE applied to the LM workloads: the
+share-vs-replicate (ξ) trade-off on real fan-out points (MusicGen
+conditioning, Zamba2 x0, Mixtral routers)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.dataflow import plan_mapping
+from repro.dataflow.extract import ExtractOptions
+
+
+def run(report):
+    for arch, stages in (("musicgen-medium", 8), ("zamba2-7b", 8), ("mixtral-8x7b", 4)):
+        cfg = get_config(arch).model
+        plans = plan_mapping(
+            cfg, 4096, 256,
+            opts=ExtractOptions(n_stages=stages),
+            generations=15, population=16, seed=2, time_budget_s=60,
+        )
+        if not plans:
+            report.add(f"dataflow.{arch}", value="no feasible plan", derived="")
+            continue
+        best_period = plans[0]
+        best_mem = min(plans, key=lambda p: p.buffer_bytes)
+        report.add(
+            f"dataflow.{arch}.fastest",
+            value=f"period={best_period.period_us:.0f}us "
+            f"buffers={best_period.buffer_bytes/2**30:.2f}GiB",
+            derived=f"MRBs={sum(best_period.mrb_choices.values())}"
+            f"/{len(best_period.mrb_choices)}",
+        )
+        report.add(
+            f"dataflow.{arch}.smallest",
+            value=f"period={best_mem.period_us:.0f}us "
+            f"buffers={best_mem.buffer_bytes/2**30:.2f}GiB",
+            derived=f"MRBs={sum(best_mem.mrb_choices.values())}"
+            f"/{len(best_mem.mrb_choices)} pareto_size={len(plans)}",
+        )

@@ -1,0 +1,121 @@
+"""E2/E3/E4 — paper Figs. 8-11 and Table 2 at reduced scale.
+
+The paper runs 2,500 generations × 5 repeats per (app × strategy ×
+decoder); a CPU container gets representative reductions (generations and
+repeats scale linearly — stagnation behavior is already visible at this
+size).  The experiment structure is identical: six approaches = {Reference,
+MRB_Always, MRB_Explore} × {CAPS-HMS, ILP}, hypervolume against the union
+reference front, and decoder wall-time speedups.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import (
+    APPLICATIONS,
+    DSEConfig,
+    STRATEGIES,
+    nondominated,
+    paper_architecture,
+    relative_hypervolume,
+    run_dse,
+)
+
+# (generations, population, offspring, ilp_budget, include_ilp)
+SCALE = {
+    "Sobel": (30, 24, 10, 1.0, True),
+    "Sobel4": (16, 16, 8, 1.0, True),
+    "Multicamera": (40, 24, 10, 0.5, False),  # ILP intractable here, as in paper
+}
+
+
+def run(report, out_dir="runs/dse"):
+    """Runs the six-approach DSE matrix.  If a previous run's results file
+    exists, its rows are replayed instead (set REPRO_DSE_FRESH=1 to force a
+    recompute — the full matrix is ~40 min on this container)."""
+    cached = os.path.join(out_dir, "dse_results.json")
+    if os.path.exists(cached) and not os.environ.get("REPRO_DSE_FRESH"):
+        with open(cached) as f:
+            results = json.load(f)
+        for app_name, res in results.items():
+            for tag, v in sorted(res["hv"].items()):
+                report.add(f"fig8.{app_name}.{tag}", value=f"relHV={v:.3f}",
+                           derived=f"wall={res['times'][tag]:.1f}s (cached)")
+            hv = res["hv"]
+            exp = hv.get("MRB_Explore^caps_hms", 0.0)
+            ref = hv.get("Reference^caps_hms", 0.0)
+            report.add(
+                f"fig9.{app_name}.explore_vs_reference",
+                value=f"explore={exp:.3f} reference={ref:.3f}",
+                derived=f"explore_wins={exp >= ref}",
+            )
+            for strategy in STRATEGIES:
+                h = res["times"].get(f"{strategy}^caps_hms")
+                i = res["times"].get(f"{strategy}^ilp")
+                if h and i:
+                    report.add(
+                        f"table2.{app_name}.{strategy}",
+                        value=f"speedup={i / max(h, 1e-9):.1f}x",
+                        derived=f"ilp={i:.1f}s caps={h:.1f}s (cached)",
+                    )
+        return results
+    os.makedirs(out_dir, exist_ok=True)
+    arch = paper_architecture()
+    results = {}
+    for app_name, factory in APPLICATIONS.items():
+        gens, pop, off, ilp_s, with_ilp = SCALE[app_name]
+        g = factory()
+        fronts = {}
+        times = {}
+        for strategy in STRATEGIES:
+            for decoder in (("caps_hms", "ilp") if with_ilp else ("caps_hms",)):
+                tag = f"{strategy}^{decoder}"
+                t0 = time.monotonic()
+                res = run_dse(
+                    g,
+                    arch,
+                    DSEConfig(
+                        strategy=strategy,
+                        decoder=decoder,
+                        population=pop,
+                        offspring=off,
+                        generations=gens,
+                        ilp_budget_s=ilp_s,
+                        seed=11,
+                        time_budget_s=420 if decoder == "ilp" else 240,
+                    ),
+                )
+                times[tag] = time.monotonic() - t0
+                fronts[tag] = res.front
+        union = nondominated([p for f in fronts.values() for p in f])
+        hv = {
+            tag: relative_hypervolume(front, union) for tag, front in fronts.items()
+        }
+        results[app_name] = {"hv": hv, "times": times,
+                             "fronts": {k: list(map(list, v)) for k, v in fronts.items()}}
+        for tag, v in sorted(hv.items()):
+            report.add(f"fig8.{app_name}.{tag}", value=f"relHV={v:.3f}",
+                       derived=f"wall={times[tag]:.1f}s")
+        # Table-2 style speedup (same strategy, heuristic vs ilp)
+        if with_ilp:
+            for strategy in STRATEGIES:
+                h = times[f"{strategy}^caps_hms"]
+                i = times[f"{strategy}^ilp"]
+                report.add(
+                    f"table2.{app_name}.{strategy}",
+                    value=f"speedup={i / max(h, 1e-9):.1f}x",
+                    derived=f"ilp={i:.1f}s caps={h:.1f}s",
+                )
+        # key paper claims at this scale
+        exp = hv.get("MRB_Explore^caps_hms", 0.0)
+        ref = hv.get("Reference^caps_hms", 0.0)
+        report.add(
+            f"fig9.{app_name}.explore_vs_reference",
+            value=f"explore={exp:.3f} reference={ref:.3f}",
+            derived=f"explore_wins={exp >= ref}",
+        )
+    with open(os.path.join(out_dir, "dse_results.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return results

@@ -1,0 +1,36 @@
+"""Insert/refresh the generated tables in EXPERIMENTS.md in place.
+
+PYTHONPATH=src python -m benchmarks.insert_tables [dryrun_dir]
+"""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks.make_experiments_md import main as gen
+
+
+def run(dryrun_dir="runs/dryrun", path="EXPERIMENTS.md"):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        gen(dryrun_dir)
+    out = buf.getvalue()
+    dry = out.split("### Roofline terms, single-pod")[0].strip()
+    roof = "### Roofline terms, single-pod" + out.split("### Roofline terms, single-pod", 1)[1]
+    text = open(path).read()
+    text = re.sub(
+        r"<!-- GENERATED:DRYRUN -->.*?(?=\n## §Roofline)",
+        "<!-- GENERATED:DRYRUN -->\n\n" + dry + "\n",
+        text, flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- GENERATED:ROOFLINE -->.*?(?=\n### Reading the table)",
+        "<!-- GENERATED:ROOFLINE -->\n\n" + roof.strip() + "\n",
+        text, flags=re.S,
+    )
+    open(path, "w").write(text)
+    print(f"tables inserted from {dryrun_dir}")
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:2] or ["runs/dryrun"]))

@@ -1,0 +1,87 @@
+"""Generate the data tables of EXPERIMENTS.md from runs/dryrun artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments_md [dryrun_dir]
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.roofline import roofline_row
+
+
+def fmt_s(x: float) -> str:
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.3f}"
+
+
+def main(dryrun_dir: str = "runs/dryrun") -> None:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+
+    # ---------------------------------------------------------- dry-run
+    print("### Dry-run matrix (generated)\n")
+    print("| arch | shape | mesh | status | mem/dev GiB | corrected | fits | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    ok = fail = skip = 0
+    for r in recs:
+        mesh = "2x16x16" if (isinstance(r.get("mesh"), list) and len(r["mesh"]) == 3) else (
+            "16x16" if r.get("status") == "ok" else r.get("mesh", "?"))
+        if r["status"] == "skipped":
+            skip += 1
+            print(f"| {r['arch']} | {r['shape']} | — | skipped | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            fail += 1
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | FAILED | — | — | — | — |")
+            continue
+        ok += 1
+        m = r["memory"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| ok | {m['per_device_bytes']/2**30:.2f} "
+            f"| {m.get('tpu_corrected_bytes', m['per_device_bytes'])/2**30:.2f} "
+            f"| {'✓' if m.get('fits_hbm_corrected', m['fits_hbm']) else '✗'} "
+            f"| {r['compile_s']} |"
+        )
+    print(f"\n**{ok} compiled, {fail} failed, {skip} documented skips.**\n")
+
+    # ---------------------------------------------------------- roofline
+    print("### Roofline terms, single-pod 16×16 (generated)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        row = roofline_row(r)
+        if not row or row["mesh"] != "16x16":
+            continue
+        print(
+            f"| {row['arch']} | {row['shape']} | {fmt_s(row['compute_s'])} "
+            f"| {fmt_s(row['memory_s'])} | {fmt_s(row['collective_s'])} "
+            f"| **{row['dominant']}** | {row['useful_ratio']:.2f} "
+            f"| {row['roofline_fraction']:.2f} |"
+        )
+    print("\n### Roofline terms, multi-pod 2×16×16 (generated)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        row = roofline_row(r)
+        if not row or row["mesh"] == "16x16":
+            continue
+        print(
+            f"| {row['arch']} | {row['shape']} | {fmt_s(row['compute_s'])} "
+            f"| {fmt_s(row['memory_s'])} | {fmt_s(row['collective_s'])} "
+            f"| **{row['dominant']}** |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun")

@@ -1,0 +1,120 @@
+"""§Perf A/B experiments: lower one cell twice with a single change and
+diff the roofline terms — the clean hypothesis → change → measure loop.
+
+Run (one experiment, ~2-10 min each):
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp ce_mode
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp microbatch
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp decode_capacity
+"""
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+    ).strip()
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import init_model
+from repro.optim import make_optimizer
+from repro.runtime.shardings import (
+    batch_specs_for_mesh, named, param_specs, state_specs,
+)
+from repro.runtime.train import TrainState, make_train_step
+from repro.data import batch_specs
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def lower_train(arch: str, *, ce_mode="onehot", microbatches=None, seq=4096, batch=256):
+    spec = get_config(arch)
+    cfg = spec.model
+    mesh = make_production_mesh()
+    params_s = jax.eval_shape(lambda r: init_model(r, cfg), jax.random.PRNGKey(0))
+    p_specs = param_specs(params_s, mesh, grouped_blocks=cfg.shared_attn_every > 0)
+    opt_init, opt_update = make_optimizer(spec.optimizer, 1e-4)
+    opt_s = jax.eval_shape(opt_init, params_s)
+    o_specs = type(opt_s)(
+        jax.sharding.PartitionSpec(),
+        state_specs(opt_s.inner, mesh, grouped_blocks=cfg.shared_attn_every > 0),
+    )
+    st = TrainState(params_s, opt_s)
+    st_specs = TrainState(p_specs, o_specs)
+    b_s = batch_specs(cfg, seq, batch)
+    b_specs = batch_specs_for_mesh(b_s, mesh)
+    mb = microbatches if microbatches is not None else spec.train_microbatches
+    step = make_train_step(
+        cfg, opt_update, microbatches=mb, grad_dtype=spec.grad_dtype,
+        grad_shardings=named(mesh, p_specs), ce_mode=ce_mode,
+    )
+    jitted = jax.jit(
+        step, in_shardings=(named(mesh, st_specs), named(mesh, b_specs)),
+        donate_argnums=(0,),
+    )
+    with mesh:
+        compiled = jitted.lower(st, b_s).compile()
+    return report(compiled)
+
+
+def report(compiled):
+    cost = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    per_dev = (
+        mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes - mem.alias_size_in_bytes
+    )
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collectives": dict(cost.collectives),
+        "compute_s": cost.flops / PEAK,
+        "memory_s": cost.bytes / HBM,
+        "collective_s": cost.collective_bytes / ICI,
+        "mem_gib": per_dev / 2**30,
+    }
+
+
+def show(tag, r):
+    print(
+        f"{tag:28s} compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+        f"collective={r['collective_s']:.3f}s mem={r['mem_gib']:.2f}GiB",
+        flush=True,
+    )
+    return r
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True,
+                    choices=["ce_mode", "microbatch", "decode_capacity"])
+    ap.add_argument("--arch", default="gemma2-9b")
+    args = ap.parse_args()
+
+    if args.exp == "ce_mode":
+        a = show("gather CE (baseline)", lower_train(args.arch, ce_mode="gather"))
+        b = show("onehot CE (vocab-parallel)", lower_train(args.arch, ce_mode="onehot"))
+        print(f"collective bytes: {a['collective_bytes']:.3e} -> "
+              f"{b['collective_bytes']:.3e} "
+              f"({a['collective_bytes']/max(b['collective_bytes'],1):.1f}x)")
+    elif args.exp == "microbatch":
+        for mb in (1, 4, 16):
+            try:
+                show(f"microbatches={mb}", lower_train(args.arch, microbatches=mb))
+            except Exception as e:
+                print(f"microbatches={mb}: {type(e).__name__} {str(e)[:120]}")
+    elif args.exp == "decode_capacity":
+        from repro.launch.dryrun import run_cell
+
+        rec = run_cell(args.arch, "decode_32k")
+        print(json.dumps({k: rec[k] for k in ("memory", "hlo_cost")}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

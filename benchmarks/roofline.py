@@ -1,0 +1,96 @@
+"""E7 — roofline analysis from the dry-run artifacts (§Roofline).
+
+Per (arch × shape × mesh) cell:
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_device / HBM_bw              [s]
+    collective = collective_bytes_per_device / link_bw      [s]
+with v5e constants (197 TF bf16, 819 GB/s HBM, 50 GB/s/link ICI; the pod
+axis crosses DCN at 6.25 GB/s).  The HLO terms come from the loop-aware
+HLO cost model (launch/hlo.py) over the post-partitioning module.
+
+Also reports MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs × devices) which exposes remat and
+wasted-rectangle overheads.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or "hlo_cost" not in rec:
+        return None
+    n_dev = rec["devices"]
+    h = rec["hlo_cost"]
+    compute_s = h["flops"] / PEAK
+    memory_s = h["hbm_bytes"] / HBM_BW
+    link = DCN_BW if len(rec.get("axes", [])) == 3 else ICI_BW
+    # collective bytes are already per-device; ICI for single-pod, the
+    # slowest traversed fabric (DCN) bounds the multi-pod schedule
+    coll_s = h["collective_bytes"] / (ICI_BW if link is ICI_BW else DCN_BW)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    kind = rec["shape"]
+    model = rec.get("model", {})
+    n_active = model.get("active_params", 0)
+    tokens = model.get("tokens_per_step", 0)
+    mult = 6.0 if kind.startswith("train") else 2.0
+    model_flops = mult * n_active * tokens
+    hlo_total = h["flops"] * n_dev
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    bound = max(compute_s, memory_s, coll_s)
+    frac = compute_s / bound if bound else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(map(str, rec["mesh"])),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "mem_gib": rec["memory"]["per_device_bytes"] / 2**30,
+        "mem_gib_corrected": rec["memory"].get("tpu_corrected_bytes",
+                                               rec["memory"]["per_device_bytes"]) / 2**30,
+        "fits": rec["memory"].get("fits_hbm_corrected", rec["memory"]["fits_hbm"]),
+    }
+
+
+def load_rows(dryrun_dir: str = "runs/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def run(report, dryrun_dir: str = "runs/dryrun"):
+    rows = load_rows(dryrun_dir)
+    for r in rows:
+        report.add(
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+            value=(
+                f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+                f"collective={r['collective_s']:.3f}s dominant={r['dominant']}"
+            ),
+            derived=(
+                f"useful={r['useful_ratio']:.2f} "
+                f"frac={r['roofline_fraction']:.2f} mem={r['mem_gib']:.1f}GiB"
+            ),
+        )
+    return rows

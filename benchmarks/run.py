@@ -1,0 +1,74 @@
+"""Benchmark harness — one experiment per paper table/figure plus the
+TPU-adaptation experiments.  Prints ``name,value,derived`` CSV and writes
+runs/bench_report.json.
+
+  E1  table1_apps       paper Table 1 (app stats, M_F / M_F_min)
+  E2-4 dse_experiments  Figs. 8-9 (hypervolume), Fig. 10-11 fronts, Table 2
+  E7  roofline          §Roofline terms from the dry-run artifacts
+  E10 mrb_kernel        MRB kernel byte-traffic + correctness
+  E11 dataflow_plans    the DSE planning LM workloads (beyond paper)
+
+Scale note: DSE runs are reduced (generations/pop) for the CPU container;
+structure and metrics are the paper's.  Use --skip-dse to skip the slowest
+part.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+class Report:
+    def __init__(self) -> None:
+        self.rows = []
+
+    def add(self, name: str, value: str, derived: str = "") -> None:
+        self.rows.append({"name": name, "value": value, "derived": derived})
+        print(f"{name},{value},{derived}", flush=True)
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.rows, f, indent=2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, help="comma-separated experiment names")
+    ap.add_argument("--skip-dse", action="store_true",
+                    help="skip the NSGA-II experiments (slowest part)")
+    ap.add_argument("--dryrun-dir", default="runs/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import dse_experiments, dataflow_plans, mrb_kernel, roofline, table1_apps
+
+    experiments = {
+        "table1": lambda r: table1_apps.run(r),
+        "roofline": lambda r: roofline.run(r, args.dryrun_dir),
+        "mrb_kernel": lambda r: mrb_kernel.run(r),
+        "dataflow": lambda r: dataflow_plans.run(r),
+        "dse": lambda r: dse_experiments.run(r),
+    }
+    if args.skip_dse:
+        experiments.pop("dse")
+    if args.only:
+        keep = set(args.only.split(","))
+        experiments = {k: v for k, v in experiments.items() if k in keep}
+
+    report = Report()
+    print("name,value,derived")
+    for name, fn in experiments.items():
+        t0 = time.monotonic()
+        try:
+            fn(report)
+            report.add(f"_timing.{name}", f"{time.monotonic()-t0:.1f}s", "ok")
+        except Exception as e:  # pragma: no cover
+            report.add(f"_error.{name}", type(e).__name__, str(e)[:200])
+    report.save("runs/bench_report.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""E1 — paper Table 1: application statistics and memory footprints."""
+from repro.core import APPLICATIONS, table1_row
+
+PAPER = {
+    "Sobel": (7, 7, 1, 71.15, 55.33),
+    "Sobel4": (23, 29, 4, 71.22, 55.38),
+    "Multicamera": (62, 111, 23, 50.47, 32.15),
+}
+
+
+def run(report):
+    rows = []
+    for name, fn in APPLICATIONS.items():
+        row = table1_row(fn())
+        want = PAPER[name]
+        got = (row["|A|"], row["|C|"], row["|A_M|"], row["M_F"], row["M_F_min"])
+        rows.append((name, got, want, got == want))
+        report.add(
+            f"table1.{name}",
+            value=f"A={got[0]} C={got[1]} A_M={got[2]} M_F={got[3]} M_F_min={got[4]}",
+            derived=f"matches_paper={got == want}",
+        )
+    return rows

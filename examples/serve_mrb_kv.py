@@ -1,0 +1,68 @@
+"""Serving demo: batched greedy decoding through the MRB ring KV cache,
+with the Pallas multi-reader decode-attention kernel cross-checked against
+the model's jnp path on the live cache.
+
+Run:  PYTHONPATH=src python examples/serve_mrb_kv.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import make_batch
+from repro.kernels import ring_decode_attention
+from repro.models.model import decode_step, init_decode_state, init_model
+from repro.runtime import make_serve_step
+
+
+def main():
+    cfg = get_config("gemma2-9b").smoke.replace(sliding_window=32)
+    B, prompt_len, new_tokens = 4, 24, 48
+    context = 64  # ring capacity > window: layers alternate local/global
+    print(f"{cfg.name}: batch={B} ring_capacity={context} window={cfg.sliding_window}")
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, prompt_len, B)
+    state = init_decode_state(cfg, B, context)
+    step = jax.jit(make_serve_step(cfg))
+
+    toks = batch["tokens"]
+    nxt = None
+    for i in range(prompt_len):
+        nxt, _, state = step(params, toks[:, i : i + 1], state, None)
+
+    t0 = time.time()
+    out = []
+    for _ in range(new_tokens):
+        nxt, _, state = step(params, nxt, state, None)
+        out.append(nxt)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=-1)
+    print(f"decoded {new_tokens} tokens/request: "
+          f"{B*new_tokens/dt:.0f} tok/s (CPU)")
+    print("request 0:", gen[0, :16].tolist())
+
+    # cross-check: run the Pallas multi-reader kernel on layer 0's ring
+    layer0 = jax.tree_util.tree_map(lambda x: x[0], state["layers"])
+    q = jax.random.normal(jax.random.PRNGKey(1),
+                          (B, cfg.n_heads, cfg.resolved_head_dim)) * 0.3
+    t = int(layer0["t"]) - 1
+    out_kernel = ring_decode_attention(
+        q, layer0["k"], layer0["v"], jnp.int32(t), use_pallas=True, interpret=True
+    )
+    out_ref = ring_decode_attention(
+        q, layer0["k"], layer0["v"], jnp.int32(t), use_pallas=False
+    )
+    err = float(jnp.max(jnp.abs(out_kernel.astype(jnp.float32)
+                                - out_ref.astype(jnp.float32))))
+    G = cfg.n_heads // cfg.n_kv_heads
+    print(f"Pallas multi-reader kernel vs oracle on the live ring: "
+          f"max_err={err:.2e} ({G} readers/KV head, KV loaded once)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper-faithful core: MRBs, channel placement, CAPS-HMS / exact modulo
+scheduling, and the hybrid NSGA-II design space exploration."""
+from .architecture import ArchitectureGraph, paper_architecture
+from .apps import APPLICATIONS, multicamera, sobel, sobel4, table1_row
+from .binding import (
+    CHANNEL_DECISIONS,
+    Binding,
+    allocation,
+    core_cost,
+    determine_channel_bindings,
+    memory_footprint,
+    validate_binding,
+)
+from .caps_hms import DecodeResult, caps_hms, decode_via_heuristic
+from .dse import (
+    DSEConfig,
+    DSEResult,
+    Genotype,
+    GenotypeSpace,
+    Individual,
+    STRATEGIES,
+    evaluate_genotype,
+    pipeline_delays,
+    run_dse,
+)
+from .graph import (
+    Actor,
+    ApplicationGraph,
+    Channel,
+    multicast_actors,
+    satisfies_multicast_structure,
+    topological_priorities,
+)
+from .ilp import ExactResult, decode_via_ilp
+from .mrb import MRBState, substitute_mrbs
+from .pareto import (
+    crowding_distance,
+    fast_nondominated_sort,
+    hypervolume,
+    nondominated,
+    normalize,
+    relative_hypervolume,
+)
+from .schedule import (
+    Schedule,
+    TaskTimes,
+    UtilizationSet,
+    comm_times,
+    f_wrap,
+    period_lower_bound,
+    required_capacities,
+    validate_schedule,
+)

@@ -1,0 +1,316 @@
+"""Hybrid design space exploration (paper §IV, Fig. 6).
+
+A NSGA-II MOEA explores the genotype 𝒢 = (ξ, C_d, β_A):
+  ξ    binary string: per multi-cast actor, replace by MRB or keep
+  C_d  integer string: per channel, placement decision ∈ CHANNEL_DECISIONS
+  β_A  integer string: per actor, index into its allowed-core list
+
+Decoding (the paper's hybrid step): Algorithm 1 (substitute MRBs) produces
+the transformed graph g̃_A; the chosen scheduler (CAPS-HMS heuristic or the
+exact branch-and-bound "ILP") produces the phenotype (P, β, γ).  Objectives
+are (period P, memory footprint M_F, core cost K), all minimized.
+
+Paper experiment settings: population 100, 25 offspring per generation,
+crossover rate 0.95, NSGA-II elitist selection.  Strategies:
+  Reference    ξ ≡ 0 (never replace)
+  MRB_Always   ξ ≡ 1 (always replace)
+  MRB_Explore  ξ explored per multi-cast actor
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .architecture import ArchitectureGraph
+from .binding import CHANNEL_DECISIONS, core_cost, memory_footprint
+from .caps_hms import decode_via_heuristic
+from .graph import ApplicationGraph, multicast_actors
+from .ilp import decode_via_ilp
+from .mrb import substitute_mrbs
+from .pareto import crowding_distance, fast_nondominated_sort, nondominated
+from .schedule import Schedule
+
+__all__ = [
+    "Genotype",
+    "GenotypeSpace",
+    "Individual",
+    "Objectives",
+    "DSEConfig",
+    "DSEResult",
+    "pipeline_delays",
+    "evaluate_genotype",
+    "run_dse",
+    "STRATEGIES",
+]
+
+Objectives = Tuple[float, float, float]  # (P, M_F, K)
+_INFEASIBLE: Objectives = (float("inf"), float("inf"), float("inf"))
+
+STRATEGIES = ("Reference", "MRB_Always", "MRB_Explore")
+
+
+def pipeline_delays(g: ApplicationGraph, delay: int = 1) -> ApplicationGraph:
+    """The paper's §VI transformation: the (acyclic) applications are given
+    at least one initial token per channel so modulo scheduling can overlap
+    iterations (applied *after* MRB substitution; A_M is detected on the
+    original zero-delay graph)."""
+    g2 = g.copy()
+    for ch in g2.channels.values():
+        ch.delay = max(ch.delay, delay)
+    return g2
+
+
+@dataclass(frozen=True)
+class Genotype:
+    xi: Tuple[int, ...]
+    cd: Tuple[int, ...]
+    ba: Tuple[int, ...]
+
+
+class GenotypeSpace:
+    """Fixed-length encodings over the *original* application graph."""
+
+    def __init__(self, g: ApplicationGraph, arch: ArchitectureGraph) -> None:
+        self.g = g
+        self.arch = arch
+        self.mcast = sorted(multicast_actors(g))
+        self.channels = sorted(g.channels)
+        self.actors = sorted(g.actors)
+        # Allowed cores per actor (type must support the actor).
+        self.allowed: Dict[str, List[str]] = {}
+        for a in self.actors:
+            cores = [
+                p
+                for p in sorted(arch.cores)
+                if g.actors[a].can_run_on(arch.cores[p].ctype)
+            ]
+            if not cores:
+                raise ValueError(f"actor {a} has no feasible core")
+            self.allowed[a] = cores
+
+    def random(self, rng: random.Random, xi_mode: str = "explore") -> Genotype:
+        xi = tuple(
+            (1 if xi_mode == "always" else 0)
+            if xi_mode != "explore"
+            else rng.randint(0, 1)
+            for _ in self.mcast
+        )
+        cd = tuple(rng.randrange(len(CHANNEL_DECISIONS)) for _ in self.channels)
+        ba = tuple(rng.randrange(len(self.allowed[a])) for a in self.actors)
+        return Genotype(xi, cd, ba)
+
+    def crossover(self, rng: random.Random, a: Genotype, b: Genotype) -> Genotype:
+        """Uniform crossover per gene segment."""
+        mix = lambda x, y: tuple(xi if rng.random() < 0.5 else yi for xi, yi in zip(x, y))
+        return Genotype(mix(a.xi, b.xi), mix(a.cd, b.cd), mix(a.ba, b.ba))
+
+    def mutate(self, rng: random.Random, g: Genotype, rate: Optional[float] = None,
+               xi_mode: str = "explore") -> Genotype:
+        n = max(1, len(g.xi) + len(g.cd) + len(g.ba))
+        r = rate if rate is not None else 1.0 / n
+        xi = tuple(
+            (1 - v if rng.random() < r and xi_mode == "explore" else v) for v in g.xi
+        )
+        cd = tuple(
+            rng.randrange(len(CHANNEL_DECISIONS)) if rng.random() < r else v
+            for v in g.cd
+        )
+        ba = tuple(
+            rng.randrange(len(self.allowed[a])) if rng.random() < r else v
+            for a, v in zip(self.actors, g.ba)
+        )
+        return Genotype(xi, cd, ba)
+
+    def force_xi(self, g: Genotype, value: int) -> Genotype:
+        return Genotype(tuple(value for _ in g.xi), g.cd, g.ba)
+
+
+@dataclass
+class Individual:
+    genotype: Genotype
+    objectives: Objectives = _INFEASIBLE
+    schedule: Optional[Schedule] = None
+
+    @property
+    def feasible(self) -> bool:
+        return self.objectives[0] != float("inf")
+
+
+def evaluate_genotype(
+    space: GenotypeSpace,
+    genotype: Genotype,
+    *,
+    decoder: str = "caps_hms",
+    ilp_budget_s: float = 3.0,
+    pipelined: bool = True,
+) -> Individual:
+    """Decode 𝒢 → phenotype → objectives (Fig. 6's update step)."""
+    g, arch = space.g, space.arch
+    xi = {a: v for a, v in zip(space.mcast, genotype.xi)}
+    gt = substitute_mrbs(g, xi)
+    if pipelined:
+        gt = pipeline_delays(gt)
+
+    # Channel decisions: original channels keep their gene; an MRB channel
+    # inherits the decision of the multi-cast actor's *input* channel.
+    cd_orig = {c: CHANNEL_DECISIONS[v] for c, v in zip(space.channels, genotype.cd)}
+    decisions: Dict[str, str] = {}
+    for c in gt.channels:
+        if c in cd_orig:
+            decisions[c] = cd_orig[c]
+        else:
+            # MRB name is "mrb{c_in,c_out1,...}" — inherit from first member.
+            inner = c[len("mrb{"):-1].split(",")
+            decisions[c] = cd_orig[inner[0]]
+
+    beta_a = {
+        a: space.allowed[a][idx % len(space.allowed[a])]
+        for a, idx in zip(space.actors, genotype.ba)
+        if a in gt.actors
+    }
+
+    if decoder == "ilp":
+        res = decode_via_ilp(gt, arch, decisions, beta_a, time_budget_s=ilp_budget_s)
+    else:
+        res = decode_via_heuristic(gt, arch, decisions, beta_a)
+    if not res.feasible or res.schedule is None:
+        return Individual(genotype, _INFEASIBLE, None)
+    sched = res.schedule
+    mf = memory_footprint(gt, sched.capacities)
+    k = core_cost(arch, sched.actor_binding)
+    return Individual(genotype, (float(sched.period), float(mf), float(k)), sched)
+
+
+@dataclass
+class DSEConfig:
+    strategy: str = "MRB_Explore"          # Reference | MRB_Always | MRB_Explore
+    decoder: str = "caps_hms"              # caps_hms | ilp
+    population: int = 100
+    offspring: int = 25
+    generations: int = 2500
+    crossover_rate: float = 0.95
+    ilp_budget_s: float = 3.0
+    seed: int = 0
+    pipelined: bool = True
+    time_budget_s: Optional[float] = None  # wall-clock cap for benchmarks
+
+
+@dataclass
+class DSEResult:
+    config: DSEConfig
+    archive: List[Individual] = field(default_factory=list)  # nondominated-so-far
+    history: List[List[Objectives]] = field(default_factory=list)  # per generation
+    evaluations: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def front(self) -> List[Objectives]:
+        return nondominated([i.objectives for i in self.archive if i.feasible])
+
+
+def _xi_mode(strategy: str) -> str:
+    return {"Reference": "never", "MRB_Always": "always", "MRB_Explore": "explore"}[strategy]
+
+
+def run_dse(
+    g: ApplicationGraph,
+    arch: ArchitectureGraph,
+    config: DSEConfig,
+    *,
+    on_generation: Optional[Callable[[int, "DSEResult"], None]] = None,
+) -> DSEResult:
+    """NSGA-II main loop (paper Fig. 6): creator → decode/evaluate →
+    selector (rank + crowding tournament) → recombinator (crossover +
+    mutation) → elitist μ+λ truncation."""
+    t0 = time.monotonic()
+    rng = random.Random(config.seed)
+    space = GenotypeSpace(g, arch)
+    mode = _xi_mode(config.strategy)
+    result = DSEResult(config)
+    cache: Dict[Genotype, Individual] = {}
+
+    def fix(gt: Genotype) -> Genotype:
+        if mode == "never":
+            return space.force_xi(gt, 0)
+        if mode == "always":
+            return space.force_xi(gt, 1)
+        return gt
+
+    def evaluate(gt: Genotype) -> Individual:
+        ind = cache.get(gt)
+        if ind is None:
+            ind = evaluate_genotype(
+                space,
+                gt,
+                decoder=config.decoder,
+                ilp_budget_s=config.ilp_budget_s,
+                pipelined=config.pipelined,
+            )
+            cache[gt] = ind
+            result.evaluations += 1
+        return ind
+
+    pop = [evaluate(fix(space.random(rng, mode))) for _ in range(config.population)]
+
+    def update_archive() -> None:
+        pool = result.archive + [i for i in pop if i.feasible]
+        objs = [i.objectives for i in pool]
+        nd = set(nondominated(objs))
+        seen = set()
+        archive = []
+        for i in pool:
+            if i.objectives in nd and i.objectives not in seen:
+                archive.append(i)
+                seen.add(i.objectives)
+        result.archive = archive
+
+    def rank_crowd(population: List[Individual]):
+        objs = [i.objectives for i in population]
+        fronts = fast_nondominated_sort(objs)
+        rank = {}
+        crowd = {}
+        for fi, front in enumerate(fronts):
+            rank.update({i: fi for i in front})
+            crowd.update(crowding_distance(objs, front))
+        return rank, crowd
+
+    def tournament(rank, crowd) -> Individual:
+        i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
+        if (rank[i], -crowd.get(i, 0.0)) <= (rank[j], -crowd.get(j, 0.0)):
+            return pop[i]
+        return pop[j]
+
+    update_archive()
+    result.history.append([i.objectives for i in result.archive])
+
+    for gen in range(config.generations):
+        if config.time_budget_s and time.monotonic() - t0 > config.time_budget_s:
+            break
+        rank, crowd = rank_crowd(pop)
+        offspring: List[Individual] = []
+        for _ in range(config.offspring):
+            p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
+            child = (
+                space.crossover(rng, p1.genotype, p2.genotype)
+                if rng.random() < config.crossover_rate
+                else p1.genotype
+            )
+            child = fix(space.mutate(rng, child, xi_mode=mode))
+            offspring.append(evaluate(child))
+        merged = pop + offspring
+        rank2, crowd2 = rank_crowd(merged)
+        # elitist μ+λ truncation by (rank, -crowding)
+        order = sorted(
+            range(len(merged)),
+            key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
+        )
+        pop = [merged[i] for i in order[: config.population]]
+        update_archive()
+        result.history.append([i.objectives for i in result.archive])
+        if on_generation:
+            on_generation(gen, result)
+
+    result.wall_s = time.monotonic() - t0
+    return result

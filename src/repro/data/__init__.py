@@ -1,0 +1,1 @@
+from .pipeline import Batch, SyntheticStream, batch_specs, make_batch

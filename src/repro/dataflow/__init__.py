@@ -1,0 +1,3 @@
+from .extract import extract_application_graph
+from .tpu_arch import tpu_pod_architecture
+from .plan import DataflowPlan, plan_mapping

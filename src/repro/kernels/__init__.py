@@ -1,0 +1,1 @@
+from .ops import on_tpu, ring_append, ring_decode_attention

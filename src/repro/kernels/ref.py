@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against in
+``tests/test_kernels.py`` (interpret=True, shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mrb_append_ref", "mrb_read_window_ref", "decode_attention_ref"]
+
+
+def mrb_append_ref(buf: jnp.ndarray, omega: jnp.ndarray, token: jnp.ndarray) -> jnp.ndarray:
+    """Write one token into the ring at slot ω.
+
+    buf:   [B, C, H, d]   ring buffer (capacity C)
+    omega: []             write index (int32)
+    token: [B, 1, H, d]
+    """
+    return jax.lax.dynamic_update_slice(buf, token.astype(buf.dtype), (0, omega, 0, 0))
+
+
+def mrb_read_window_ref(
+    buf: jnp.ndarray, t: jnp.ndarray, window: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather the last `window` tokens (positions t-window+1 … t) in ring
+    order.  Returns (tokens [B, window, H, d], validity [window]).
+
+    Slot s holds absolute position p = t − ((t − s) mod C); the returned
+    window w ∈ [0, window) maps to position t − window + 1 + w, i.e. slot
+    (t − window + 1 + w) mod C; validity = position ≥ 0.
+    """
+    B, C, H, d = buf.shape
+    w = jnp.arange(window)
+    pos = t - window + 1 + w
+    slot = jnp.mod(pos, C)
+    out = jnp.take(buf, slot, axis=1)
+    return out, pos >= 0
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    buf_k: jnp.ndarray,
+    buf_v: jnp.ndarray,
+    t: jnp.ndarray,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Multi-reader GQA decode attention over the MRB ring cache.
+
+    q:          [B, H, d]       H = kv_heads · G query-head readers
+    buf_k/v:    [B, C, kv, d]   one ring per kv head, written once (MRB)
+    t:          []              current absolute position (token t just
+                                written at slot t mod C)
+    window:     attend to the last `window` positions (0 = unlimited)
+    Returns [B, H, d].
+    """
+    B, C, kv, d = buf_k.shape
+    H = q.shape[1]
+    G = H // kv
+    qh = q.reshape(B, kv, G, d)
+    slot = jnp.arange(C)
+    slot_pos = t - jnp.mod(t - slot, C)
+    valid = slot_pos >= 0
+    if window > 0:
+        valid &= slot_pos > t - window
+    s = jnp.einsum("bkgd,bckd->bkgc", qh.astype(jnp.float32), buf_k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, buf_v.astype(jnp.float32))
+    return out.reshape(B, H, d)

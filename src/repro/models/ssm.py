@@ -1,0 +1,186 @@
+"""Mamba2 (State Space Duality) blocks — chunked SSD scan + O(1) decode.
+
+Follows the SSD formulation of arXiv:2405.21060: per-head scalar decay
+A < 0, input-dependent Δt (softplus), grouped B/C of state size N, causal
+depthwise conv on the (x, B, C) stream, gated RMSNorm, out-projection.
+
+Training/prefill uses the chunkwise algorithm: quadratic attention-like
+computation inside chunks of length Q and a `lax.scan` carrying the
+inter-chunk state [B, H, P, N] — O(L·Q) instead of O(L²).  Decode is the
+exact recurrence: S ← S·exp(Δt·A) + Δt·B ⊗ x, one token per step, which is
+what makes `long_500k` run at O(1) memory for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding_utils import constrain
+
+__all__ = ["init_ssm", "ssm_fwd", "ssm_decode", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, nh, conv_dim
+
+
+def init_ssm(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    s, d_inner, nh, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    sc = 1.0 / math.sqrt(D)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + nh  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(k1, (D, in_dim), jnp.float32) * sc,
+        "conv_w": jax.random.normal(k2, (s.d_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), math.log(math.e - 1), jnp.float32),  # softplus⁻¹(1)
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(k3, (d_inner, D), jnp.float32)
+        / math.sqrt(d_inner),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    s, d_inner, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt  # xbc = (x, B, C) conv stream
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = g.astype(jnp.float32)
+    out = gf * jax.lax.rsqrt(jnp.mean(jnp.square(gf), -1, keepdims=True) + 1e-6) * scale
+    return out.astype(y.dtype)
+
+
+def ssm_fwd(p: Dict, cfg: ModelConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence SSD.  u: [B, L, D] → [B, L, D]."""
+    s, d_inner, nh, conv_dim = _dims(cfg)
+    B_, L, D = u.shape
+    Q = min(s.chunk, L)
+    assert L % Q == 0, f"seq {L} must be divisible by ssm chunk {Q}"
+    proj = u @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # causal depthwise conv over the (x, B, C) stream
+    pad = jnp.zeros((B_, s.d_conv - 1, conv_dim), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(
+        xp[:, i : i + L, :] * p["conv_w"][i] for i in range(s.d_conv)
+    ) + p["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)
+    conv = constrain(conv, "data", None, "model")
+    gn = s.n_groups * s.d_state
+    x, Bc, Cc = jnp.split(conv, [d_inner, d_inner + gn], axis=-1)
+    x = x.reshape(B_, L, nh, s.head_dim)
+    Bc = Bc.reshape(B_, L, s.n_groups, s.d_state)
+    Cc = Cc.reshape(B_, L, s.n_groups, s.d_state)
+    heads_per_group = nh // s.n_groups
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, L, nh]
+    A = -jnp.exp(p["A_log"])                                     # [nh] < 0
+    a = dt * A                                                   # log decay
+
+    # chunked scan
+    nchunks = L // Q
+    xc = x.reshape(B_, nchunks, Q, nh, s.head_dim)
+    Bcc = Bc.reshape(B_, nchunks, Q, s.n_groups, s.d_state)
+    Ccc = Cc.reshape(B_, nchunks, Q, s.n_groups, s.d_state)
+    ac = a.reshape(B_, nchunks, Q, nh)
+    dtc = dt.reshape(B_, nchunks, Q, nh)
+
+    def chunk_step(state, inp):
+        # state: [B, nh, P, N]
+        xq, Bq, Cq, aq, dtq = inp  # [B,Q,...]
+        xq = xq.astype(jnp.float32)
+        Bq = Bq.astype(jnp.float32)
+        Cq = Cq.astype(jnp.float32)
+        cum = jnp.cumsum(aq, axis=1)                            # [B,Q,nh]
+        # intra-chunk: M[b,i,j,h] = exp(cum_i - cum_j) for i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # [B,Q,Q,nh]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        M = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        xdt = xq * dtq[..., None]                               # [B,Q,nh,P]
+        Bh = jnp.repeat(Bq, heads_per_group, axis=2)            # [B,Q,nh,N]
+        Ch = jnp.repeat(Cq, heads_per_group, axis=2)
+        scores = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)          # [B,Q,Q,nh]
+        y_intra = jnp.einsum("bijh,bijh,bjhp->bihp", scores, M, xdt)
+        # inter-chunk contribution from carried state
+        decay_in = jnp.exp(cum)                                 # [B,Q,nh]
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", Ch, state, decay_in)
+        # state update
+        total = cum[:, -1, :]                                   # [B,nh]
+        decay_out = jnp.exp(total[:, None, :] - cum)            # [B,Q,nh]
+        state_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjhn,bjh,bjhp->bhpn", Bh, decay_out, xdt
+        )
+        return state_new, (y_intra + y_inter)
+
+    state0 = jnp.zeros((B_, nh, s.head_dim, s.d_state), jnp.float32)
+    # xs stay in the compute dtype (bf16 at scale): the f32 copies of the
+    # chunked x/B/C streams dominated the SSM archs' memory roofline term
+    # (zamba2/train_4k: 294 s); decays (a, dt) remain f32 — the exp/cumsum
+    # chain is precision-critical, the streams are not.
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(Bcc, 1, 0),
+        jnp.moveaxis(Ccc, 1, 0),
+        jnp.moveaxis(ac, 1, 0),
+        jnp.moveaxis(dtc, 1, 0),
+    )
+    _, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, L, nh, s.head_dim)
+    y = y + p["D_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, L, d_inner).astype(u.dtype)
+    return _gated_norm(y, z, p["norm"]) @ p["out_proj"]
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    s, d_inner, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrence.  u: [B, 1, D]."""
+    s, d_inner, nh, conv_dim = _dims(cfg)
+    B_, _, D = u.shape
+    proj = u[:, 0, :] @ p["in_proj"]                             # [B, in_dim]
+    z, xbc, dt = _split_proj(cfg, proj)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # [B, d_conv, C]
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)
+    gn = s.n_groups * s.d_state
+    x, Bc, Cc = jnp.split(conv, [d_inner, d_inner + gn], axis=-1)
+    x = x.reshape(B_, nh, s.head_dim).astype(jnp.float32)
+    Bc = Bc.reshape(B_, s.n_groups, s.d_state).astype(jnp.float32)
+    Cc = Cc.reshape(B_, s.n_groups, s.d_state).astype(jnp.float32)
+    heads_per_group = nh // s.n_groups
+    Bh = jnp.repeat(Bc, heads_per_group, axis=1)                 # [B,nh,N]
+    Ch = jnp.repeat(Cc, heads_per_group, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                      # [B,nh]
+    S = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhpn", Bh, dt, x
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + p["D_skip"][None, :, None] * x
+    y = y.reshape(B_, 1, d_inner).astype(u.dtype)
+    out = _gated_norm(y, z[:, None, :], p["norm"]) @ p["out_proj"]
+    new_state = {"conv": hist[:, 1:, :], "ssm": S}
+    return out, new_state

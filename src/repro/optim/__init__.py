@@ -1,0 +1,9 @@
+from .optimizers import (
+    OptState,
+    adamw,
+    adafactor,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+from .compression import int8_error_feedback_compress, int8_decompress

@@ -1,0 +1,60 @@
+"""Int8 error-feedback gradient compression for cross-replica reduction.
+
+Scheme (1-bit-Adam family, int8 variant):
+  * each replica quantizes its local gradient shard to int8 with a
+    per-tensor fp32 scale *after adding the carried error-feedback
+    residual*;
+  * the wire transfer (all-gather over the data axis inside shard_map)
+    moves int8 — a 4× collective-bytes reduction vs f32 (2× vs bf16),
+    which directly shrinks the roofline collective term;
+  * replicas dequantize and sum locally; the quantization error is stored
+    and re-injected next step (error feedback keeps the scheme unbiased
+    over time — convergence-neutral in expectation).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "int8_error_feedback_compress",
+    "int8_decompress",
+    "compressed_psum",
+    "init_error_state",
+]
+
+Pytree = Any
+
+
+def int8_error_feedback_compress(
+    g: jnp.ndarray, err: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q_int8, scale, new_err).  g and err are f32-compatible."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Inside shard_map: int8-compressed mean-reduction over ``axis``.
+    Wire bytes = |g| ints8 + one f32 scale per replica (vs |g| f32)."""
+    q, scale, new_err = int8_error_feedback_compress(g, err)
+    qs = jax.lax.all_gather(q, axis)          # [n, ...] int8 on the wire
+    ss = jax.lax.all_gather(scale, axis)      # [n]
+    n = qs.shape[0]
+    summed = jnp.einsum(
+        "n...,n->...", qs.astype(jnp.float32), ss.astype(jnp.float32)
+    )
+    return summed / n, new_err

@@ -1,0 +1,170 @@
+"""Optimizers: AdamW and Adafactor (factored second moments — required to
+fit 340B-class training in HBM), global-norm clipping, cosine schedule.
+
+Pure-pytree implementation (no optax dependency): an optimizer is a pair
+(init, update) over arbitrary param pytrees; states are pytrees and shard
+alongside the params under pjit (ZeRO-style when the param specs shard)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "adafactor",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "make_optimizer",
+]
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Pytree
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------- AdamW
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params: Pytree) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            {
+                "m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+            },
+        )
+
+    def update(grads: Pytree, state: OptState, params: Pytree) -> Tuple[Pytree, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state.inner["m"], state.inner["v"], params,
+            is_leaf=lambda x: isinstance(x, jnp.ndarray),
+        )
+        new_p = jax.tree_util.tree_map(lambda t3: t3[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t3: t3[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t3: t3[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, {"m": new_m, "v": new_v})
+
+    return init, update
+
+
+# ------------------------------------------------------------ Adafactor
+def adafactor(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    """Factored second-moment optimizer (Shazeer & Stern): O(r+c) state per
+    r×c matrix instead of O(r·c) — 340B params fit where Adam cannot."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params: Pytree) -> OptState:
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(jnp.zeros((), jnp.int32), jax.tree_util.tree_map(st, params))
+
+    def update(grads: Pytree, state: OptState, params: Pytree) -> Tuple[Pytree, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = gf * jax.lax.rsqrt(vr[..., None] / denom[..., None])
+                u = u * jax.lax.rsqrt(vc[..., None, :])
+                s2 = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v)
+                s2 = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), s2
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state.inner, params, is_leaf=lambda x: isinstance(x, jnp.ndarray)
+        )
+        new_p = jax.tree_util.tree_map(lambda t2: t2[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree_util.tree_map(lambda t2: t2[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_s)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

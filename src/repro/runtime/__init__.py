@@ -1,0 +1,11 @@
+from .compressed_dp import CompressedTrainState, make_compressed_dp_train_step
+from .fault import ElasticController, HeartbeatMonitor, StragglerDetector
+from .loop import TrainLoopConfig, TrainReport, run_training
+from .shardings import batch_specs_for_mesh, data_axes, named, param_specs, state_specs
+from .train import (
+    TrainState,
+    cross_entropy_chunked,
+    init_train_state,
+    make_serve_step,
+    make_train_step,
+)

@@ -1,0 +1,98 @@
+"""Data-parallel training step with int8 error-feedback gradient reduction.
+
+``shard_map`` over the data axis: each replica computes local gradients,
+quantizes them to int8 (with the carried error-feedback residual), moves
+int8 across the wire (all-gather), and dequantize-sums locally — a 4×
+reduction of gradient collective bytes vs f32 (2× vs bf16).  The
+error-feedback state rides in :class:`CompressedTrainState` and keeps the
+scheme unbiased over steps (property-tested in tests/test_substrate.py).
+
+This is the pure-DP variant (params replicated inside the region): the
+wire savings target the cross-pod / cross-host gradient reduction, which
+on the multi-pod mesh crosses DCN — the slowest fabric in the roofline.
+For FSDP/TP meshes the same ``compressed_psum`` composes per-shard; the
+pjit path remains the default trainer.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.optim import OptState, clip_by_global_norm
+from repro.optim.compression import compressed_psum, init_error_state
+from .train import TrainState, make_loss_fn
+
+__all__ = ["CompressedTrainState", "make_compressed_dp_train_step"]
+
+Pytree = Any
+
+
+class CompressedTrainState(NamedTuple):
+    params: Pytree
+    opt: OptState
+    err: Pytree          # error-feedback residuals, same shapes as params
+
+
+def make_compressed_dp_train_step(
+    cfg: ModelConfig,
+    opt_update: Callable,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    grad_clip: float = 1.0,
+    vocab_chunk: int = 512,
+):
+    """Returns (init_state_fn, train_step).  ``train_step(state, batch)``
+    runs the whole DP step inside shard_map: batch sharded over ``axis``,
+    params/opt/error-state replicated."""
+    loss_fn = make_loss_fn(cfg, vocab_chunk)
+
+    def per_replica(state: CompressedTrainState, batch: Dict):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        # int8 on the wire; error feedback per leaf
+        new_err_leaves = []
+        reduced = []
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        e_leaves = jax.tree_util.tree_leaves(state.err)
+        for g, e in zip(g_leaves, e_leaves):
+            r, ne = compressed_psum(g, e, axis)
+            reduced.append(r.astype(jnp.float32))
+            new_err_leaves.append(ne)
+        grads = jax.tree_util.tree_unflatten(treedef, reduced)
+        new_err = jax.tree_util.tree_unflatten(treedef, new_err_leaves)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = opt_update(grads, state.opt, state.params)
+        loss = jax.lax.pmean(loss, axis)
+        return (
+            CompressedTrainState(new_params, new_opt, new_err),
+            {"loss": loss, "grad_norm": gnorm},
+        )
+
+    def train_step(state: CompressedTrainState, batch: Dict):
+        in_specs = (
+            CompressedTrainState(P(), OptState(P(), P()), P()),
+            {k: P(axis) for k in batch},
+        )
+        out_specs = (
+            CompressedTrainState(P(), OptState(P(), P()), P()),
+            {"loss": P(), "grad_norm": P()},
+        )
+        fn = jax.shard_map(
+            per_replica, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+        return fn(state, batch)
+
+    def init_state(train_state: TrainState) -> CompressedTrainState:
+        return CompressedTrainState(
+            train_state.params, train_state.opt, init_error_state(train_state.params)
+        )
+
+    return init_state, train_step

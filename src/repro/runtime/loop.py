@@ -1,0 +1,129 @@
+"""The training loop: steps + checkpoint/restart + fault handling.
+
+Single-host on CPU here, but written against the multi-host contract:
+data is indexed statelessly by step (resume needs no data state), saves
+are async + atomic, restore re-shards onto whatever mesh the elastic
+controller picked, and failures (real or injected) roll back to the last
+checkpoint instead of crashing the job.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.data import SyntheticStream
+from repro.models.config import ModelConfig
+from .fault import StragglerDetector
+from .train import TrainState, init_train_state, make_train_step
+
+__all__ = ["TrainLoopConfig", "run_training", "TrainReport"]
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: Optional[str] = None
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup: int = 10
+    grad_clip: float = 1.0
+    seq_len: int = 128
+    global_batch: int = 8
+    microbatches: int = 1
+    seed: int = 0
+    log_every: int = 10
+    # test hook: raise a simulated failure at this step (once)
+    inject_failure_at: Optional[int] = None
+
+
+@dataclass
+class TrainReport:
+    losses: List[float] = field(default_factory=list)
+    steps_done: int = 0
+    restarts: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+class _InjectedFailure(RuntimeError):
+    pass
+
+
+def run_training(
+    cfg: ModelConfig,
+    loop: TrainLoopConfig,
+    *,
+    on_step: Optional[Callable[[int, Dict], None]] = None,
+) -> TrainReport:
+    rng = jax.random.PRNGKey(loop.seed)
+    state, opt_update = init_train_state(
+        rng, cfg, loop.optimizer, loop.peak_lr, loop.warmup, loop.steps
+    )
+    train_step = jax.jit(
+        make_train_step(
+            cfg, opt_update, grad_clip=loop.grad_clip, microbatches=loop.microbatches
+        )
+    )
+    stream = SyntheticStream(cfg, loop.seq_len, loop.global_batch, seed=loop.seed)
+    mgr = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
+    detector = StragglerDetector()
+    report = TrainReport()
+
+    start = 0
+    if mgr is not None:
+        restored = mgr.restore_latest(state)
+        if restored[0] is not None:
+            start, state = restored
+
+    step = start
+    injected = False
+    while step < loop.steps:
+        try:
+            t0 = time.monotonic()
+            batch = stream.batch(step)
+            if (
+                loop.inject_failure_at is not None
+                and step == loop.inject_failure_at
+                and not injected
+            ):
+                injected = True
+                raise _InjectedFailure(f"simulated node failure at step {step}")
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            detector.record("host0", dt)
+            report.losses.append(loss)
+            report.step_times.append(dt)
+            if on_step:
+                on_step(step, metrics)
+            step += 1
+            report.steps_done = step
+            if mgr is not None and step % loop.ckpt_every == 0:
+                mgr.save(step, state)
+        except _InjectedFailure:
+            # roll back to last checkpoint (elastic path: new mesh + restore)
+            report.restarts += 1
+            if mgr is None:
+                raise
+            restored = mgr.restore_latest(state)
+            if restored[0] is None:
+                step = 0
+                rng = jax.random.PRNGKey(loop.seed)
+                state, _ = init_train_state(
+                    rng, cfg, loop.optimizer, loop.peak_lr, loop.warmup, loop.steps
+                )
+            else:
+                step, state = restored
+    if mgr is not None:
+        mgr.save(step, state, blocking=True)
+        mgr.wait()
+    return report

@@ -1,0 +1,211 @@
+"""Sharding rules: param/optimizer/batch pytrees → PartitionSpecs.
+
+Strategy (single code path for 1-pod and multi-pod meshes):
+  * batch dims shard over all non-"model" axes (pure DP, pod included);
+  * params: column-parallel weights shard their output dim over "model"
+    and their input dim over "data" (ZeRO-3/FSDP); row-parallel weights
+    ("wo", "out_proj", "out") shard the *contracting* dim over "model" so
+    consecutive matmuls don't reshard between wi and wo;
+  * MoE expert stacks shard the expert dim over "model" (EP) when
+    divisible (Qwen3-MoE: 128/16), else fall back to TP on the hidden dim
+    (Mixtral: 8 experts on a 16-way axis);
+  * every rule checks divisibility — a dim that doesn't divide the axis is
+    replicated, never padded;
+  * optimizer states inherit the rule through their leaf names (m/v mirror
+    the param; adafactor's factored vr/vc get shape-generic sharding).
+
+Stacked-layer leading axes (layers / groups) are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_specs",
+    "batch_specs_for_mesh",
+    "state_specs",
+    "named",
+    "data_axes",
+]
+
+Pytree = Any
+
+ROW_PARALLEL = ("wo", "out_proj", "out")        # contract-dim model-sharded
+STACK_HINT = ("blocks", "tail", "shared")       # under these, dim0(/1) = layer axes
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, dim: int, axis) -> bool:
+    return axis is not None and dim % _axis_size(mesh, axis) == 0 and dim >= _axis_size(mesh, axis)
+
+
+def _leaf_spec(mesh: Mesh, path: Tuple[str, ...], body: Tuple[int, ...]) -> P:
+    """Spec for one parameter leaf *body* (stacked-layer dims already
+    stripped by the caller) given its path names."""
+    name = path[-1] if path else ""
+    dp = data_axes(mesh)
+    DATA = dp if len(dp) > 1 else (dp[0] if dp else None)  # FSDP over pod×data
+    if len(body) <= 1:
+        # norm scales, per-head vectors, scalars: replicate
+        return P(*([None] * len(body)))
+
+    # --- MoE expert stacks [E, D, F]
+    if name in ("wi", "wg", "wo") and len(body) == 3 and "moe" in path:
+        E = body[0]
+        if _fits(mesh, E, "model"):
+            # EP: experts over model; FSDP the matrix input dim over data
+            d_axis = DATA if _fits(mesh, body[1], DATA) else None
+            return P("model", d_axis, None)
+        # fallback: TP on the ffn dim
+        if name == "wo":  # [E, F, D]
+            m = "model" if _fits(mesh, body[1], "model") else None
+            d = DATA if _fits(mesh, body[2], DATA) else None
+            return P(None, m, d)
+        m = "model" if _fits(mesh, body[2], "model") else None
+        d = DATA if _fits(mesh, body[1], DATA) else None
+        return P(None, d, m)
+
+    # --- embeddings [n_emb, V, D] / heads [n_emb, D, V]: vocab-parallel + FSDP
+    if name in ("tok", "head") and len(body) == 3:
+        v_dim, d_dim = (1, 2) if name == "tok" else (2, 1)
+        spec = [None, None, None]
+        spec[v_dim] = "model" if _fits(mesh, body[v_dim], "model") else None
+        spec[d_dim] = DATA if _fits(mesh, body[d_dim], DATA) else None
+        return P(*spec)
+
+    # --- generic trailing-2D matrices
+    *mid, d_in, d_out = body
+    if name in ROW_PARALLEL:
+        a_in = "model" if _fits(mesh, d_in, "model") else None
+        a_out = DATA if _fits(mesh, d_out, DATA) else None
+    else:
+        a_in = DATA if _fits(mesh, d_in, DATA) else None
+        a_out = "model" if _fits(mesh, d_out, "model") else None
+    return P(*([None] * len(mid) + [a_in, a_out]))
+
+
+def _path_names(keypath) -> Tuple[str, ...]:
+    names = []
+    for p in keypath:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                names.append(str(getattr(p, attr)))
+                break
+    return tuple(names)
+
+
+def param_specs(params: Pytree, mesh: Mesh, grouped_blocks: bool = False) -> Pytree:
+    """PartitionSpec pytree matching ``params``."""
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        n_stack = 0
+        if "blocks" in names:
+            n_stack = 2 if grouped_blocks else 1
+        elif "tail" in names:
+            n_stack = 1
+        shape = tuple(leaf.shape)
+        if n_stack:
+            spec = _leaf_spec(mesh, names, shape[n_stack:])
+            return P(*([None] * n_stack + list(spec)))
+        return _leaf_spec(mesh, names, shape)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def state_specs(opt_inner: Pytree, mesh: Mesh, grouped_blocks: bool = False) -> Pytree:
+    """Optimizer-state specs: m/v mirror their param; factored vr/vc and
+    anything else get shape-generic sharding (largest dims first)."""
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        # strip optimizer wrapper names so the param rule sees param names
+        core = tuple(n for n in names if n not in ("m", "v", "vr", "vc"))
+        shape = tuple(leaf.shape)
+        if names and names[-1] in ("vr", "vc"):
+            # factored: shard trailing dim over data if divisible
+            dp = data_axes(mesh)
+            DATA = dp if len(dp) > 1 else (dp[0] if dp else None)
+            spec = [None] * len(shape)
+            if len(shape) >= 1 and _fits(mesh, shape[-1], DATA):
+                spec[-1] = DATA
+            return P(*spec)
+        n_stack = 0
+        if "blocks" in core:
+            n_stack = 2 if grouped_blocks else 1
+        elif "tail" in core:
+            n_stack = 1
+        if n_stack:
+            spec = _leaf_spec(mesh, core, shape[n_stack:])
+            return P(*([None] * n_stack + list(spec)))
+        return _leaf_spec(mesh, core, shape)
+
+    return jax.tree_util.tree_map_with_path(rule, opt_inner)
+
+
+def decode_state_specs(state: Pytree, mesh: Mesh) -> Pytree:
+    """Decode-cache specs.  Leaves are stacked along layers/invocations at
+    dim 0: KV rings [L, B, W, kv, hd] shard batch over data and KV heads
+    over model (when divisible); SSM states [L, B, H, P, N] likewise; the
+    ring indices ω/t are replicated scalars per layer."""
+    dp = data_axes(mesh)
+    daxis = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    nd = _axis_size(mesh, daxis) if daxis is not None else 1
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        if name in ("omega", "t") or len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        spec = [None] * len(shape)
+        if daxis is not None and shape[1] % nd == 0 and shape[1] >= nd:
+            spec[1] = daxis  # batch
+        if name in ("k", "v") and len(shape) == 5:
+            if _fits(mesh, shape[3], "model"):
+                spec[3] = "model"        # shard KV heads
+            elif _fits(mesh, shape[2], "model"):
+                spec[2] = "model"        # else shard ring capacity (GQA kv <
+                # model axis: a replicated cache would be 16× the bytes)
+        elif name == "ssm" and len(shape) == 5:
+            spec[2] = "model" if _fits(mesh, shape[2], "model") else None
+        elif name == "conv" and len(shape) == 4:
+            spec[3] = "model" if _fits(mesh, shape[3], "model") else None
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, state)
+
+
+def batch_specs_for_mesh(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    dp = data_axes(mesh)
+    axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+    n = _axis_size(mesh, axis) if axis is not None else 1
+
+    def rule(leaf):
+        nd = len(leaf.shape)
+        a = axis if (axis is not None and leaf.shape[0] % n == 0 and leaf.shape[0] >= n) else None
+        return P(*([a] + [None] * (nd - 1)))
+
+    return {k: rule(v) for k, v in batch.items()}
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

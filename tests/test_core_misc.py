@@ -1,0 +1,137 @@
+"""Graph transform (Alg. 1), channel binding (Alg. 2), Pareto machinery,
+and the Table-1 benchmark applications."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    APPLICATIONS,
+    ApplicationGraph,
+    CHANNEL_DECISIONS,
+    hypervolume,
+    multicast_actors,
+    nondominated,
+    normalize,
+    paper_architecture,
+    relative_hypervolume,
+    substitute_mrbs,
+    table1_row,
+)
+from repro.core.binding import determine_channel_bindings
+
+
+TABLE1 = {
+    "Sobel": {"|A|": 7, "|C|": 7, "|A_M|": 1, "M_F": 71.15, "M_F_min": 55.33},
+    "Sobel4": {"|A|": 23, "|C|": 29, "|A_M|": 4, "M_F": 71.22, "M_F_min": 55.38},
+    "Multicamera": {"|A|": 62, "|C|": 111, "|A_M|": 23, "M_F": 50.47, "M_F_min": 32.15},
+}
+
+
+@pytest.mark.parametrize("name", list(TABLE1))
+def test_table1_statistics_match_paper(name):
+    row = table1_row(APPLICATIONS[name]())
+    assert row == TABLE1[name]
+
+
+@pytest.mark.parametrize("name", list(TABLE1))
+def test_mrb_substitution_structure(name):
+    g = APPLICATIONS[name]()
+    mcs = multicast_actors(g)
+    gt = substitute_mrbs(g, {a: 1 for a in mcs})
+    assert multicast_actors(gt) == []
+    assert len(gt.actors) == len(g.actors) - len(mcs)
+    # every MRB channel has capacity γ_in + γ_out and ≥ 2 readers
+    for c, ch in gt.channels.items():
+        if ch.is_mrb:
+            assert ch.capacity == 2  # all γ=1 in the generators
+            assert len(gt.consumers[c]) >= 1
+
+
+def test_partial_substitution():
+    g = APPLICATIONS["Sobel4"]()
+    mcs = multicast_actors(g)
+    xi = {a: (1 if i % 2 == 0 else 0) for i, a in enumerate(sorted(mcs))}
+    gt = substitute_mrbs(g, xi)
+    kept = [a for a in mcs if not xi[a]]
+    assert sorted(multicast_actors(gt)) == sorted(kept)
+
+
+def test_channel_binding_fallback_chain():
+    """PROD overflows core-local → TILE-PROD → GLOBAL (Algorithm 2)."""
+    g = ApplicationGraph("t")
+    g.add_actor("p", {"t1": 1})
+    g.add_actor("q", {"t1": 1})
+    g.add_channel("small", "p", "q", token_bytes=1000)
+    g.add_channel("big", "p", "q", token_bytes=3_000_000)      # > core-local
+    g.add_channel("huge", "p", "q", token_bytes=80_000_000)    # > tile-local
+    arch = paper_architecture()
+    ba = {"p": "p_T1_1", "q": "p_T2_1"}
+    caps = {c: 1 for c in g.channels}
+    bc = determine_channel_bindings(
+        g, arch, {c: "PROD" for c in g.channels}, caps, ba
+    )
+    assert bc["small"] == "q_p_T1_1"
+    assert bc["big"] == "q_T1"
+    assert bc["huge"] == "q_global"
+    # CONS-side chain
+    bc = determine_channel_bindings(
+        g, arch, {c: "CONS" for c in g.channels}, caps, ba
+    )
+    assert bc["small"] == "q_p_T2_1"
+    assert bc["big"] == "q_T2"
+    assert bc["huge"] == "q_global"
+
+
+def test_capacity_accounting_across_channels():
+    """Two channels that individually fit but jointly overflow: the second
+    falls through (greedy accounting, Alg. 2)."""
+    g = ApplicationGraph("t")
+    g.add_actor("p", {"t1": 1})
+    g.add_actor("q", {"t1": 1})
+    g.add_channel("a", "p", "q", token_bytes=1_500_000)
+    g.add_channel("b", "p", "q", token_bytes=1_500_000)
+    arch = paper_architecture()  # core-local 2.5 MiB
+    ba = {"p": "p_T1_1", "q": "p_T1_2"}
+    bc = determine_channel_bindings(
+        g, arch, {c: "PROD" for c in g.channels}, {c: 1 for c in g.channels}, ba
+    )
+    assert sorted(bc.values()) == ["q_T1", "q_p_T1_1"]
+
+
+# ---------------------------------------------------------------- pareto
+def test_hypervolume_known_values():
+    assert hypervolume([(0.0, 0.0)]) == pytest.approx(1.0)
+    assert hypervolume([(0.5, 0.5)]) == pytest.approx(0.25)
+    assert hypervolume([(0.0, 1.0), (1.0, 0.0)]) == pytest.approx(0.0)
+    assert hypervolume([(0.25, 0.75), (0.75, 0.25)]) == pytest.approx(
+        0.25 * 0.75 + 0.25 * 0.25 + 0.25 * 0.25
+    )
+    assert hypervolume([(0.0, 0.0, 0.0)]) == pytest.approx(1.0)
+    assert hypervolume([(0.5, 0.5, 0.5)]) == pytest.approx(0.125)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    pts=st.lists(
+        st.tuples(*([st.floats(0, 1)] * 3)), min_size=1, max_size=12
+    )
+)
+def test_hypervolume_monotone_under_union(pts):
+    """Adding points never decreases hypervolume; subsets never exceed."""
+    base = hypervolume(pts)
+    assert 0.0 <= base <= 1.0
+    more = pts + [(0.5, 0.5, 0.5)]
+    assert hypervolume(more) >= base - 1e-12
+
+
+def test_relative_hypervolume_reference_is_one():
+    ref = [(1.0, 10.0, 3.0), (2.0, 5.0, 2.0), (4.0, 2.0, 1.0)]
+    assert relative_hypervolume(ref, ref) == pytest.approx(1.0)
+    worse = [(4.0, 12.0, 3.5)]
+    assert relative_hypervolume(worse, ref) <= 1.0
+
+
+def test_nondominated_filters():
+    pts = [(1, 1, 1), (2, 2, 2), (1, 2, 0)]
+    nd = nondominated(pts)
+    assert (2, 2, 2) not in nd
+    assert (1, 1, 1) in nd and (1, 2, 0) in nd

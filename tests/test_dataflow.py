@@ -1,0 +1,68 @@
+"""Dataflow bridge: extraction invariants per family and the MRB
+trade-off surfaced on a real LM workload."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.graph import multicast_actors
+from repro.dataflow import extract_application_graph, plan_mapping, tpu_pod_architecture
+from repro.dataflow.extract import ExtractOptions
+
+
+def test_extraction_dense_chain():
+    cfg = get_config("qwen3-0.6b").model
+    g = extract_application_graph(cfg, 4096, 256, ExtractOptions(n_stages=8))
+    assert len([a for a in g.actors if a.startswith("stage")]) == 8
+    assert multicast_actors(g) == []  # dense LM: no fan-out points
+    g.validate()
+
+
+def test_extraction_audio_conditioning_fanout():
+    cfg = get_config("musicgen-medium").model
+    g = extract_application_graph(cfg, 4096, 256, ExtractOptions(n_stages=6))
+    assert multicast_actors(g) == ["cond_cast"]
+    assert len(g.consumers) and len(g.out_channels("cond_cast")) == 6
+
+
+def test_extraction_hybrid_x0_fanout():
+    cfg = get_config("zamba2-7b").model
+    g = extract_application_graph(cfg, 4096, 256, ExtractOptions(n_stages=4))
+    assert multicast_actors(g) == ["x0_cast"]
+
+
+def test_extraction_moe_router_fanouts():
+    cfg = get_config("mixtral-8x7b").model
+    g = extract_application_graph(cfg, 4096, 256, ExtractOptions(n_stages=4))
+    mcs = multicast_actors(g)
+    assert len(mcs) == 4 and all(m.startswith("router") for m in mcs)
+
+
+def test_tpu_arch_structure():
+    arch = tpu_pod_architecture()
+    assert len(arch.cores) == 16
+    assert len(arch.tiles()) == 4
+    assert set(arch.core_types()) == {"t1", "t2", "t3"}
+    # routing sanity: intra-tile vs inter-tile vs global
+    assert arch.route_interconnects("p_T1_1", "q_p_T1_1") == []
+    assert arch.route_interconnects("p_T1_1", "q_T1") == ["h_T1"]
+    assert "h_NoC" in arch.route_interconnects("p_T1_1", "q_T2")
+
+
+@pytest.mark.slow
+def test_plan_mapping_finds_mrb_tradeoff():
+    """The planner must return feasible plans, and when both MRB choices
+    survive in the Pareto set, the MRB plan uses less buffer memory."""
+    cfg = get_config("musicgen-medium").model
+    plans = plan_mapping(
+        cfg, 4096, 256, opts=ExtractOptions(n_stages=6),
+        generations=12, population=16, seed=0, time_budget_s=45,
+    )
+    assert plans, "planner found no feasible mapping"
+    with_mrb = [p for p in plans if all(p.mrb_choices.values()) and p.mrb_choices]
+    without = [p for p in plans if not any(p.mrb_choices.values())]
+    if with_mrb and without:
+        assert min(p.buffer_bytes for p in with_mrb) < min(
+            p.buffer_bytes for p in without
+        )
+    for p in plans:
+        assert p.period_us > 0 and p.core_cost > 0
+        assert set(p.stage_binding)  # bound actors recorded

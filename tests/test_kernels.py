@@ -1,0 +1,117 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the kernel body executes on CPU; on TPU the same code compiles
+natively)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import mrb_decode_attention
+from repro.kernels.mrb_ring import mrb_append
+from repro.kernels.ref import decode_attention_ref, mrb_append_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,C,H,d,block", [(1, 256, 2, 128, 128), (2, 512, 4, 128, 256), (2, 1024, 8, 64, 256)]
+)
+def test_mrb_append_sweep(B, C, H, d, block, dtype):
+    buf = jax.random.normal(KEY, (B, C, H, d), jnp.float32).astype(dtype)
+    tok = jax.random.normal(jax.random.PRNGKey(1), (B, 1, H, d), jnp.float32).astype(dtype)
+    for omega in (0, 1, block - 1, block, C - 1):
+        out = mrb_append(buf, jnp.int32(omega), tok, block=block, interpret=True)
+        ref = mrb_append_ref(buf, jnp.int32(omega), tok)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_mrb_append_sequence_builds_ring():
+    """Appending C+3 tokens wraps: final buffer holds the last C tokens."""
+    B, C, H, d = 1, 8, 1, 128
+    buf = jnp.zeros((B, C, H, d), jnp.float32)
+    toks = [jnp.full((B, 1, H, d), float(i + 1)) for i in range(C + 3)]
+    for i, tok in enumerate(toks):
+        buf = mrb_append(buf, jnp.int32(i % C), tok, block=8, interpret=True)
+    # slot s holds token with value (largest i ≡ s mod C) + 1
+    got = np.asarray(buf[0, :, 0, 0])
+    want = np.array([9, 10, 11, 4, 5, 6, 7, 8], np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,C,kv,G,d,block,window,cap,t",
+    [
+        (2, 512, 4, 3, 128, 256, 0, 0.0, 100),     # partial fill
+        (1, 512, 2, 8, 64, 128, 128, 30.0, 700),   # wrap + window + softcap
+        (2, 256, 1, 12, 128, 256, 0, 0.0, 255),    # exactly full
+        (1, 1024, 8, 2, 128, 512, 512, 0.0, 2000), # deep wrap + window
+        (1, 256, 2, 1, 128, 256, 0, 0.0, 0),       # single token, G=1
+    ],
+)
+def test_decode_attention_sweep(B, C, kv, G, d, block, window, cap, t, dtype):
+    H = kv * G
+    q = (jax.random.normal(KEY, (B, H, d), jnp.float32) * 0.3).astype(dtype)
+    bk = (jax.random.normal(jax.random.PRNGKey(1), (B, C, kv, d)) * 0.3).astype(dtype)
+    bv = (jax.random.normal(jax.random.PRNGKey(2), (B, C, kv, d)) * 0.3).astype(dtype)
+    out = mrb_decode_attention(
+        q, bk, bv, jnp.int32(t), window=window, softcap=cap, block=block,
+        interpret=True,
+    )
+    ref = decode_attention_ref(q, bk, bv, jnp.int32(t), window=window, softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_decode_attention_multi_reader_equals_per_head_loop():
+    """The MRB claim: one shared KV read serving G readers must equal G
+    independent single-reader attentions (readers are independent)."""
+    B, C, kv, G, d = 1, 256, 2, 4, 128
+    H = kv * G
+    q = jax.random.normal(KEY, (B, H, d), jnp.float32) * 0.3
+    bk = jax.random.normal(jax.random.PRNGKey(1), (B, C, kv, d)) * 0.3
+    bv = jax.random.normal(jax.random.PRNGKey(2), (B, C, kv, d)) * 0.3
+    shared = mrb_decode_attention(q, bk, bv, jnp.int32(100), interpret=True)
+    qh = q.reshape(B, kv, G, d)
+    per_reader = []
+    for g in range(G):
+        single = mrb_decode_attention(
+            qh[:, :, g, :].reshape(B, kv, d), bk, bv, jnp.int32(100), interpret=True
+        )
+        per_reader.append(single.reshape(B, kv, 1, d))
+    stacked = jnp.concatenate(per_reader, axis=2).reshape(B, H, d)
+    np.testing.assert_allclose(
+        np.asarray(shared), np.asarray(stacked), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_kernel_matches_model_attention_decode():
+    """The kernel is numerically interchangeable with the model's jnp
+    decode-attention path (same ring layout [B, C, kv, d])."""
+    from repro.configs import get_config
+    from repro.models.layers import attention_decode, init_attention, init_cache
+
+    cfg = get_config("qwen3-0.6b").smoke
+    p = init_attention(KEY, cfg)
+    B, ctx = 2, 64
+    cache = init_cache(cfg, B, ctx, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (B, 1, cfg.d_model), jnp.float32) * 0.1
+    out_model, new_cache = attention_decode(p, cfg, x, cache)
+    # reproduce via kernel on the cache the model just wrote
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, cfg.n_heads, hd)
+    from repro.models.layers import _rms, apply_rope
+
+    q = _rms(q[:, None].reshape(B, 1, cfg.n_heads, hd), p["q_norm"])
+    q = apply_rope(q, jnp.zeros((1,), jnp.int32), cfg.rope_theta)[:, 0]
+    out_kernel = mrb_decode_attention(
+        q, new_cache["k"], new_cache["v"], jnp.int32(0), interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_model[:, 0]),
+        np.asarray(out_kernel.reshape(B, -1) @ p["wo"]),
+        atol=1e-4, rtol=1e-4,
+    )

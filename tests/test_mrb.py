@@ -1,0 +1,115 @@
+"""MRB semantics (paper §II-C): the Fig. 3 trace and the FIFO-equivalence
+property that justifies the whole construction."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mrb import (
+    MRBState,
+    jax_mrb_available,
+    jax_mrb_free,
+    jax_mrb_init,
+    jax_mrb_read,
+    jax_mrb_write,
+)
+
+
+def test_fig3_trace():
+    """Paper Fig. 3: γ=4 MRB with readers a3, a4."""
+    m = MRBState(4, ("a3", "a4"))
+    # (a) initially empty
+    assert m.available("a3") == 0 and m.available("a4") == 0
+    assert m.free() == 4
+    # (b) a1 fires three times
+    for _ in range(3):
+        m.write()
+    assert m.write_index == 3
+    assert m.read_index["a3"] == 0 and m.read_index["a4"] == 0
+    assert m.available("a3") == 3  # ((3-0-1) mod 4)+1 = 3
+    # (c) fire <a3, a3, a3, a1>
+    m.read("a3"); m.read("a3"); m.read("a3"); m.write()
+    assert m.read_index["a3"] == 3
+    assert m.available("a3") == 1  # ((0-3-1) mod 4)+1 = 1
+    assert m.read_index["a4"] == 0
+    assert m.available("a4") == 4
+    assert m.free() == 0  # full from the writer's perspective
+    # (d) fire <a4, a3>
+    m.read("a4"); m.read("a3")
+    assert m.read_index["a3"] == -1  # empty for a3
+    assert m.available("a3") == 0
+    assert m.available("a4") == 3
+    assert m.free() == 1
+
+
+def test_overflow_underflow_guarded():
+    m = MRBState(2, ("r",))
+    with pytest.raises(RuntimeError):
+        m.read("r")
+    m.write(); m.write()
+    with pytest.raises(RuntimeError):
+        m.write()
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    capacity=st.integers(1, 8),
+    n_readers=st.integers(1, 4),
+    ops=st.lists(st.integers(0, 4), max_size=60),
+)
+def test_mrb_equals_fifo_bank(capacity, n_readers, ops):
+    """An MRB observably equals a bank of per-reader FIFOs of the same
+    capacity: same can_write/can_read and the same consumed sequences."""
+    readers = tuple(f"r{i}" for i in range(n_readers))
+    m = MRBState(capacity, readers)
+    fifos = {r: [] for r in readers}  # list of token ids
+    produced = 0
+    consumed = {r: [] for r in readers}
+
+    for op in ops:
+        if op == 0:  # write
+            can = all(len(f) < capacity for f in fifos.values())
+            assert m.can_write() == can
+            if can:
+                m.write()
+                for r in readers:
+                    fifos[r].append(produced)
+                produced += 1
+        else:  # read by reader op-1 (mod n)
+            r = readers[(op - 1) % n_readers]
+            can = len(fifos[r]) > 0
+            assert m.can_read(r) == can, (m.snapshot(), fifos)
+            if can:
+                m.read(r)
+                consumed[r].append(fifos[r].pop(0))
+        for r in readers:
+            assert m.available(r) == len(fifos[r])
+    for r in readers:
+        assert consumed[r] == sorted(consumed[r])  # FIFO order per reader
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    capacity=st.integers(1, 6),
+    n_readers=st.integers(1, 3),
+    ops=st.lists(st.integers(0, 3), max_size=40),
+)
+def test_jax_mirror_matches_python(capacity, n_readers, ops):
+    """The functional JAX index machine matches MRBState exactly."""
+    readers = tuple(f"r{i}" for i in range(n_readers))
+    m = MRBState(capacity, readers)
+    omega, rho = jax_mrb_init(capacity, n_readers)
+    for op in ops:
+        avail = jax_mrb_available(omega, rho, capacity)
+        for i, r in enumerate(readers):
+            assert int(avail[i]) == m.available(r)
+        assert int(jax_mrb_free(omega, rho, capacity)) == m.free()
+        if op == 0 and m.can_write():
+            m.write()
+            omega, rho = jax_mrb_write(omega, rho, capacity)
+        elif op > 0:
+            i = (op - 1) % n_readers
+            if m.can_read(readers[i]):
+                m.read(readers[i])
+                rho = jax_mrb_read(omega, rho, capacity, i)
+        assert int(omega) == m.write_index
+        for i, r in enumerate(readers):
+            assert int(rho[i]) == m.read_index[r]

@@ -1,0 +1,327 @@
+"""Substrate: data pipeline, optimizers, compression, checkpointing, fault
+tolerance, end-to-end training loop with restart."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointManager, latest_step, restore_pytree, save_pytree
+from repro.configs import get_config
+from repro.data import SyntheticStream, make_batch
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    int8_error_feedback_compress,
+    int8_decompress,
+)
+from repro.runtime import (
+    ElasticController,
+    HeartbeatMonitor,
+    StragglerDetector,
+    TrainLoopConfig,
+    run_training,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------- data
+def test_data_deterministic_and_stateless():
+    cfg = get_config("qwen3-0.6b").smoke
+    s = SyntheticStream(cfg, 32, 4, seed=3)
+    b1, b2 = s.batch(7), s.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s.batch(8)["tokens"], b1["tokens"])
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg = get_config("qwen3-0.6b").smoke
+    full = SyntheticStream(cfg, 16, 8, seed=1, host_index=0, host_count=1)
+    h0 = SyntheticStream(cfg, 16, 8, seed=1, host_index=0, host_count=2)
+    h1 = SyntheticStream(cfg, 16, 8, seed=1, host_index=1, host_count=2)
+    assert h0.host_batch == 4 and h1.host_batch == 4
+    assert not np.array_equal(h0.batch(0)["tokens"], h1.batch(0)["tokens"])
+
+
+def test_data_modalities():
+    vlm = get_config("internvl2-2b").smoke
+    b = make_batch(vlm, 32, 2)
+    assert b["img_embeds"].shape == (2, vlm.n_img_tokens, vlm.d_model)
+    assert (np.asarray(b["labels"][:, : vlm.n_img_tokens]) == -100).all()
+    audio = get_config("musicgen-medium").smoke
+    b = make_batch(audio, 32, 2)
+    assert b["tokens"].shape == (2, audio.n_codebooks, 32)
+    assert b["cond_embeds"].shape == (2, audio.n_cond_tokens, audio.d_model)
+
+
+# ------------------------------------------------------------- optimizers
+def _quad_problem(opt_init, opt_update, steps=60):
+    params = {"w": jnp.array([3.0, -2.0]), "m": jnp.ones((2, 2)) * 2}
+    state = opt_init(params)
+    for _ in range(steps):
+        grads = jax.tree_util.tree_map(lambda p: 2 * p, params)  # ∇|p|²
+        params, state = opt_update(grads, state, params)
+    return params
+
+
+def test_adamw_descends():
+    p = _quad_problem(*adamw(1e-1, weight_decay=0.0))
+    assert float(jnp.abs(p["w"]).max()) < 1.0
+    assert float(jnp.abs(p["m"]).max()) < 1.5
+
+
+def test_adafactor_descends_and_state_is_factored():
+    init, update = adafactor(1e-1)
+    params = {"m": jnp.ones((8, 16))}
+    st0 = init(params)
+    assert st0.inner["m"]["vr"].shape == (8,)
+    assert st0.inner["m"]["vc"].shape == (16,)
+    p = _quad_problem(init, update)
+    assert float(jnp.abs(p["m"]).max()) < 1.5
+
+
+def test_clipping_and_schedule():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    cn = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert cn == pytest.approx(1.0, rel=1e-4)
+    lr = cosine_schedule(1e-3, 10, 100)
+    assert float(lr(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=4, max_size=32))
+def test_int8_error_feedback_converges(vals):
+    """Property: with error feedback, the *accumulated* dequantized signal
+    tracks the accumulated true signal (bias does not accumulate)."""
+    g = jnp.asarray(vals, jnp.float32)
+    err = jnp.zeros_like(g)
+    total_true = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for _ in range(8):
+        q, scale, err = int8_error_feedback_compress(g, err)
+        total_sent = total_sent + int8_decompress(q, scale)
+        total_true = total_true + g
+    resid = np.abs(np.asarray(total_true - total_sent))
+    # residual is bounded by one quantization step, never 8 accumulated
+    step = float(jnp.max(jnp.abs(g))) / 127.0 + 1e-9
+    assert resid.max() <= 2 * step + 1e-5
+
+
+# ------------------------------------------------------------ checkpoints
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(2.5)}}
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(d, 3, tree)
+        save_pytree(d, 7, tree)
+        assert latest_step(d) == 7
+        out = restore_pytree(d, 3, tree)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+
+
+def test_checkpoint_manager_async_and_prune():
+    tree = {"w": jnp.ones((4, 4))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        mgr.wait()
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(d) if n.startswith("step_")
+        )
+        assert steps == [3, 4]
+        got_step, got = mgr.restore_latest(tree)
+        assert got_step == 4
+
+
+def test_checkpoint_rejects_shape_mismatch():
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(d, 1, {"w": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            restore_pytree(d, 1, {"w": jnp.ones((3, 3))})
+
+
+# --------------------------------------------------------------- fault FT
+def test_heartbeat_and_straggler():
+    hb = HeartbeatMonitor(["h0", "h1"], timeout_s=10)
+    hb.beat("h0", now=100.0)
+    hb.last_seen["h1"] = 80.0
+    assert hb.dead(now=100.0) == ["h1"]
+    sd = StragglerDetector(threshold=2.0, patience=2)
+    for t in range(10):
+        sd.record("h0", 1.0)
+        sd.record("h1", 1.0 if t < 5 else 5.0)
+        flags = sd.check()
+    assert flags == ["h1"]
+
+
+def test_elastic_controller_plans():
+    ec = ElasticController(chips_per_host=4, model_axis=16)
+    plan = ec.plan([f"h{i}" for i in range(64)])       # 256 chips
+    assert plan.shape == (16, 16)
+    plan = ec.plan([f"h{i}" for i in range(50)])       # 200 chips → 8×16
+    assert plan.shape == (8, 16)
+    assert ec.plan(["h0"]) is None                     # can't fit TP=16
+
+
+# --------------------------------------------------------- training loop
+def test_training_decreases_loss_and_survives_failure():
+    cfg = get_config("qwen3-0.6b").smoke
+    with tempfile.TemporaryDirectory() as d:
+        rep = run_training(
+            cfg,
+            TrainLoopConfig(
+                steps=10, ckpt_every=4, ckpt_dir=d, seq_len=64,
+                global_batch=4, inject_failure_at=6, peak_lr=1e-3,
+            ),
+        )
+    assert rep.restarts == 1
+    assert rep.steps_done == 10
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_resume_is_bit_deterministic():
+    """Same seed, interrupted+resumed vs straight-through: identical."""
+    cfg = get_config("mamba2-370m").smoke.replace(n_layers=1)
+    with tempfile.TemporaryDirectory() as d1:
+        straight = run_training(
+            cfg, TrainLoopConfig(steps=6, ckpt_every=3, ckpt_dir=d1,
+                                 seq_len=32, global_batch=2),
+        )
+    with tempfile.TemporaryDirectory() as d2:
+        broken = run_training(
+            cfg, TrainLoopConfig(steps=6, ckpt_every=3, ckpt_dir=d2,
+                                 seq_len=32, global_batch=2,
+                                 inject_failure_at=4),
+        )
+    np.testing.assert_allclose(
+        straight.losses[-1], broken.losses[-1], rtol=1e-6
+    )
+
+
+def test_microbatched_grads_match_full_batch():
+    from repro.optim import make_optimizer
+    from repro.runtime.train import TrainState, make_train_step
+    from repro.models.model import init_model
+
+    cfg = get_config("qwen3-0.6b").smoke
+    params = init_model(KEY, cfg)
+    opt_init, opt_update = make_optimizer("adamw", 1e-3)
+    state = TrainState(params, opt_init(params))
+    batch = make_batch(cfg, 32, 4)
+    s1 = make_train_step(cfg, opt_update, microbatches=1)
+    s2 = make_train_step(cfg, opt_update, microbatches=2)
+    (_, m1) = s1(state, batch)
+    (_, m2) = s2(state, batch)
+    # losses are means over the same tokens; grad path equivalence shows in
+    # matching grad norms
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]), rel=2e-2)
+
+
+def test_chunked_ce_matches_direct():
+    from repro.runtime.train import cross_entropy_chunked
+    from repro.models.layers import logits_fwd
+    from repro.models.model import init_model
+
+    cfg = get_config("qwen3-0.6b").smoke
+    params = init_model(KEY, cfg)
+    B, L = 2, 64
+    hidden = jax.random.normal(KEY, (B, L, cfg.d_model), jnp.float32) * 0.3
+    labels = jax.random.randint(KEY, (B, L), 0, cfg.vocab)
+    labels = labels.at[:, -1].set(-100)
+    s, m = cross_entropy_chunked(params["embed"], cfg, hidden, labels, chunk=16)
+    logits = logits_fwd(params["embed"], cfg, hidden).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    picked = jnp.take_along_axis(logp, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    mask = labels != -100
+    direct = -(picked * mask).sum()
+    assert float(m) == int(mask.sum())
+    np.testing.assert_allclose(float(s), float(direct), rtol=1e-5)
+
+
+def test_compressed_dp_step_matches_reference():
+    """shard_map DP step with int8 error-feedback gradient reduction: same
+    loss, params within quantization tolerance of the uncompressed step,
+    residual state accumulates."""
+    import jax
+    from repro.models.model import init_model
+    from repro.optim import make_optimizer
+    from repro.runtime import (
+        CompressedTrainState,
+        TrainState,
+        make_compressed_dp_train_step,
+        make_train_step,
+    )
+
+    cfg = get_config("qwen3-0.6b").smoke
+    params = init_model(KEY, cfg)
+    opt_init, opt_update = make_optimizer("adamw", 1e-3)
+    ts = TrainState(params, opt_init(params))
+    batch = make_batch(cfg, 64, 4)
+    mesh = jax.make_mesh((1,), ("data",))
+    init_cs, cstep = make_compressed_dp_train_step(cfg, opt_update, mesh)
+    cs2, metrics = cstep(init_cs(ts), batch)
+    ts2, m2 = make_train_step(cfg, opt_update)(ts, batch)
+    assert float(metrics["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    deltas = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        cs2.params, ts2.params,
+    )
+    assert max(jax.tree_util.tree_leaves(deltas)) < 5e-3
+    assert sum(
+        float(jnp.sum(jnp.abs(e))) for e in jax.tree_util.tree_leaves(cs2.err)
+    ) > 0
+
+
+@pytest.mark.slow
+def test_compressed_dp_multi_replica_subprocess():
+    """8 forced devices: the int8-reduced DP step stays close to the
+    uncompressed full-batch step across real replicas."""
+    import subprocess, sys, os, json
+
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.optim import make_optimizer
+from repro.runtime import TrainState, make_compressed_dp_train_step, make_train_step
+from repro.data import make_batch
+
+cfg = get_config("qwen3-0.6b").smoke
+params = init_model(jax.random.PRNGKey(0), cfg)
+opt_init, opt_update = make_optimizer("adamw", 1e-3)
+ts = TrainState(params, opt_init(params))
+batch = make_batch(cfg, 64, 8)
+mesh = jax.make_mesh((8,), ("data",))
+init_cs, cstep = make_compressed_dp_train_step(cfg, opt_update, mesh)
+cs2, metrics = cstep(init_cs(ts), batch)
+ts2, m2 = make_train_step(cfg, opt_update)(ts, batch)
+deltas = jax.tree_util.tree_map(
+    lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+    cs2.params, ts2.params)
+print(json.dumps({
+    "loss_c": float(metrics["loss"]), "loss_r": float(m2["loss"]),
+    "max_delta": max(jax.tree_util.tree_leaves(deltas))}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-1500:]
+    rec = json.loads([l for l in out.stdout.splitlines() if l.startswith("{")][0])
+    assert rec["loss_c"] == pytest.approx(rec["loss_r"], rel=1e-4)
+    assert rec["max_delta"] < 5e-3
