@@ -5,6 +5,7 @@ Run (one experiment, ~2-10 min each):
   PYTHONPATH=src python -m benchmarks.perf_ab --exp ce_mode
   PYTHONPATH=src python -m benchmarks.perf_ab --exp microbatch
   PYTHONPATH=src python -m benchmarks.perf_ab --exp decode_capacity
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp dse_cache
 """
 import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -90,12 +91,96 @@ def show(tag, r):
     return r
 
 
+def dse_cache_ab(repeats: int = 5):
+    """A/B the memoized evaluation engine on the Sobel benchmark config
+    (SCALE['Sobel']: 30 generations, population 24, offspring 10, seed 11,
+    all three strategies).  Arms:
+
+      no_memo   no decode memoization, no ξ-transform cache
+      seed      the pre-engine run_dse: exact-genotype memoization only
+      engine    content-addressed canonical key + ξ-transform LRU
+
+    Pareto fronts must be bit-identical across all arms — the engine
+    changes wall time only.  Arms are interleaved and the per-arm minimum
+    reported: shared-container wall-clock noise swamps sequential medians.
+    """
+    import time as _time
+
+    from repro.core import (
+        DSEConfig,
+        EvaluationEngine,
+        GenotypeSpace,
+        paper_architecture,
+        run_dse,
+        sobel,
+    )
+
+    g, arch = sobel(), paper_architecture()
+    arms = {
+        "no_memo": dict(cache_mode="none", transform_cache=0),
+        "seed": dict(cache_mode="exact", transform_cache=0),
+        "engine": dict(cache_mode="canonical", transform_cache=64),
+    }
+    strategies = ("Reference", "MRB_Always", "MRB_Explore")
+
+    def run_arm(arm):
+        fronts, decodes, hits = [], 0, 0
+        t0 = _time.monotonic()
+        for strategy in strategies:
+            cfg = DSEConfig(
+                strategy=strategy, population=24, offspring=10, generations=30, seed=11
+            )
+            with EvaluationEngine(GenotypeSpace(g, arch), **arms[arm]) as eng:
+                res = run_dse(g, arch, cfg, engine=eng)
+            fronts.append(res.front)
+            decodes += res.evaluations
+            hits += res.cache_hits
+        return _time.monotonic() - t0, fronts, decodes, hits
+
+    run_arm("no_memo")  # warm-up
+    walls = {a: [] for a in arms}
+    last = {}
+    for _ in range(repeats):
+        for arm in arms:
+            w, fronts, decodes, hits = run_arm(arm)
+            walls[arm].append(w)
+            last[arm] = (fronts, decodes, hits)
+    results = {}
+    for arm in arms:
+        fronts, decodes, hits = last[arm]
+        results[arm] = {"wall_s": min(walls[arm]), "decodes": decodes, "hits": hits}
+        print(
+            f"arm={arm:8s} wall={results[arm]['wall_s']:.2f}s "
+            f"decodes={decodes} hits={hits}",
+            flush=True,
+        )
+    assert last["no_memo"][0] == last["seed"][0] == last["engine"][0], (
+        "Pareto fronts diverged across engine arms"
+    )
+    for arm in ("seed", "engine"):
+        print(
+            f"speedup {arm} vs no_memo: "
+            f"{results['no_memo']['wall_s'] / results[arm]['wall_s']:.2f}x"
+        )
+    print(
+        f"speedup engine vs seed: "
+        f"{results['seed']['wall_s'] / results['engine']['wall_s']:.2f}x "
+        f"({results['seed']['decodes'] - results['engine']['decodes']} decodes saved)"
+    )
+    print("fronts bit-identical across all arms: OK")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True,
-                    choices=["ce_mode", "microbatch", "decode_capacity"])
+                    choices=["ce_mode", "microbatch", "decode_capacity", "dse_cache"])
     ap.add_argument("--arch", default="gemma2-9b")
     args = ap.parse_args()
+
+    if args.exp == "dse_cache":
+        dse_cache_ab()
+        return
 
     if args.exp == "ce_mode":
         a = show("gather CE (baseline)", lower_train(args.arch, ce_mode="gather"))

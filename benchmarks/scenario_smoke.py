@@ -1,0 +1,78 @@
+"""Scenario-generator smoke benchmark (CI tier).
+
+Samples one scenario per family, validates it, decodes it with CAPS-HMS
+under a random binding, and runs a micro DSE on the first family — a fast
+end-to-end pulse of generator → decoder → engine.  Exits non-zero on any
+infeasibility or invariant violation.
+
+Run:  PYTHONPATH=src python -m benchmarks.scenario_smoke [--n 5] [--seed 0]
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+import time
+
+from repro.core import DSEConfig, run_dse
+from repro.core.binding import CHANNEL_DECISIONS
+from repro.core.caps_hms import decode_via_heuristic
+from repro.core.schedule import validate_schedule
+from repro.scenarios import FAMILIES, sample_scenarios, validate_scenario
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=len(FAMILIES), help="scenario count")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.n < 1:
+        ap.error("--n must be >= 1")
+
+    scenarios = sample_scenarios(seed=args.seed, n=args.n)
+    failures = 0
+    print(f"{'scenario':38s} {'|A|':>4s} {'|C|':>4s} {'|A_M|':>5s} {'P':>7s} {'ms':>7s}")
+    for sc in scenarios:
+        t0 = time.monotonic()
+        g, arch = sc.build()
+        validate_scenario(g, arch)
+        rng = random.Random(f"smoke:{sc.name}")
+        cores = sorted(arch.cores)
+        ba = {
+            a: rng.choice(
+                [p for p in cores if g.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in g.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
+        res = decode_via_heuristic(g, arch, cd, ba)
+        ok = res.feasible and validate_schedule(g, arch, res.schedule) == []
+        if not ok:
+            failures += 1
+        n_mc = sum(1 for a in g.actors.values() if a.multicast)
+        ms = (time.monotonic() - t0) * 1e3
+        print(
+            f"{sc.name:38s} {len(g.actors):4d} {len(g.channels):4d} {n_mc:5d} "
+            f"{res.period if res.feasible else -1:7d} {ms:7.1f}"
+            + ("" if ok else "  FAIL")
+        )
+
+    g, arch = scenarios[0].build()
+    t0 = time.monotonic()
+    res = run_dse(
+        g, arch,
+        DSEConfig(population=8, offspring=4, generations=2, seed=args.seed),
+    )
+    print(
+        f"micro-DSE on {scenarios[0].name}: front={len(res.front)} pts "
+        f"decodes={res.evaluations} hits={res.cache_hits} "
+        f"wall={time.monotonic() - t0:.1f}s"
+    )
+    if not res.front:
+        failures += 1
+    print("scenario_smoke:", "FAIL" if failures else "OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

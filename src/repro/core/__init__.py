@@ -23,6 +23,7 @@ from .dse import (
     pipeline_delays,
     run_dse,
 )
+from .engine import CACHE_MODES, EvaluationEngine, decode_key
 from .graph import (
     Actor,
     ApplicationGraph,

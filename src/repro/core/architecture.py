@@ -152,6 +152,47 @@ class ArchitectureGraph:
     def core_cost(self, ctype: str) -> float:
         return self.core_costs.get(ctype, 1.0)
 
+    # ------------------------------------------------------------- serialize
+    def to_dict(self) -> Dict:
+        """Plain-data form (JSON-safe); inverse of :meth:`from_dict`."""
+        from dataclasses import asdict
+
+        return {
+            "name": self.name,
+            "cores": {p: asdict(c) for p, c in sorted(self.cores.items())},
+            "memories": {q: asdict(m) for q, m in sorted(self.memories.items())},
+            "interconnects": {
+                h: asdict(i) for h, i in sorted(self.interconnects.items())
+            },
+            "core_costs": dict(self.core_costs),
+            "global_memory": self.global_memory,
+            "noc": self.noc,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ArchitectureGraph":
+        g = cls(d.get("name", "arch"))
+        g.cores = {p: Core(**spec) for p, spec in d["cores"].items()}
+        g.memories = {q: Memory(**spec) for q, spec in d["memories"].items()}
+        g.interconnects = {
+            h: Interconnect(**spec) for h, spec in d["interconnects"].items()
+        }
+        g.core_costs = dict(d.get("core_costs", {}))
+        g.global_memory = d.get("global_memory")
+        g.noc = d.get("noc")
+        return g
+
+    def signature(self) -> str:
+        """Stable content digest of the architecture structure (name
+        excluded): equal signatures ⇔ structurally identical targets."""
+        import hashlib
+        import json
+
+        d = self.to_dict()
+        d.pop("name", None)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
 
 def paper_architecture(
     *,

@@ -40,6 +40,7 @@ __all__ = [
     "DSEConfig",
     "DSEResult",
     "pipeline_delays",
+    "transformed_graph",
     "evaluate_genotype",
     "run_dse",
     "STRATEGIES",
@@ -138,6 +139,20 @@ class Individual:
         return self.objectives[0] != float("inf")
 
 
+def transformed_graph(
+    space: GenotypeSpace, xi_bits: Tuple[int, ...], pipelined: bool = True
+) -> ApplicationGraph:
+    """Algorithm 1 (+ §VI pipeline delays) for one ξ pattern.  The result
+    depends only on (ξ, pipelined) and is treated read-only by the
+    decoders, so callers may cache it across genotypes (see
+    ``EvaluationEngine``)."""
+    xi = {a: v for a, v in zip(space.mcast, xi_bits)}
+    gt = substitute_mrbs(space.g, xi)
+    if pipelined:
+        gt = pipeline_delays(gt)
+    return gt
+
+
 def evaluate_genotype(
     space: GenotypeSpace,
     genotype: Genotype,
@@ -145,13 +160,19 @@ def evaluate_genotype(
     decoder: str = "caps_hms",
     ilp_budget_s: float = 3.0,
     pipelined: bool = True,
+    transformed: Optional[ApplicationGraph] = None,
 ) -> Individual:
-    """Decode 𝒢 → phenotype → objectives (Fig. 6's update step)."""
+    """Decode 𝒢 → phenotype → objectives (Fig. 6's update step).
+
+    ``transformed`` short-circuits the ξ graph transform with a cached
+    ``transformed_graph(space, genotype.xi, pipelined)`` result.
+    """
     g, arch = space.g, space.arch
-    xi = {a: v for a, v in zip(space.mcast, genotype.xi)}
-    gt = substitute_mrbs(g, xi)
-    if pipelined:
-        gt = pipeline_delays(gt)
+    gt = (
+        transformed
+        if transformed is not None
+        else transformed_graph(space, genotype.xi, pipelined)
+    )
 
     # Channel decisions: original channels keep their gene; an MRB channel
     # inherits the decision of the multi-cast actor's *input* channel.
@@ -195,6 +216,12 @@ class DSEConfig:
     seed: int = 0
     pipelined: bool = True
     time_budget_s: Optional[float] = None  # wall-clock cap for benchmarks
+    # Evaluation-engine knobs (see repro.core.engine). All settings produce
+    # bit-identical Pareto fronts under a fixed seed; they only change how
+    # much decoding work is shared/parallelized.
+    cache_mode: str = "canonical"          # canonical | exact | none
+    cache_max_entries: Optional[int] = None
+    n_workers: int = 0                     # >0: process-parallel decode
 
 
 @dataclass
@@ -202,8 +229,10 @@ class DSEResult:
     config: DSEConfig
     archive: List[Individual] = field(default_factory=list)  # nondominated-so-far
     history: List[List[Objectives]] = field(default_factory=list)  # per generation
-    evaluations: int = 0
+    evaluations: int = 0   # decodes actually performed (cache misses)
     wall_s: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def front(self) -> List[Objectives]:
@@ -220,97 +249,131 @@ def run_dse(
     config: DSEConfig,
     *,
     on_generation: Optional[Callable[[int, "DSEResult"], None]] = None,
+    engine: Optional["EvaluationEngine"] = None,
 ) -> DSEResult:
     """NSGA-II main loop (paper Fig. 6): creator → decode/evaluate →
     selector (rank + crowding tournament) → recombinator (crossover +
-    mutation) → elitist μ+λ truncation."""
+    mutation) → elitist μ+λ truncation.
+
+    Decoding goes through an :class:`repro.core.engine.EvaluationEngine`
+    (memoized, optionally process-parallel).  Pass ``engine`` to share its
+    decode cache across runs — e.g. across strategies on the same app; the
+    engine's decoder settings then take precedence over ``config``'s.  All
+    engine configurations yield bit-identical fronts under a fixed seed:
+    genotype creation never depends on decode timing or order.
+    """
+    from .engine import EvaluationEngine  # deferred: engine imports this module
+
     t0 = time.monotonic()
     rng = random.Random(config.seed)
-    space = GenotypeSpace(g, arch)
     mode = _xi_mode(config.strategy)
     result = DSEResult(config)
-    cache: Dict[Genotype, Individual] = {}
-
-    def fix(gt: Genotype) -> Genotype:
-        if mode == "never":
-            return space.force_xi(gt, 0)
-        if mode == "always":
-            return space.force_xi(gt, 1)
-        return gt
-
-    def evaluate(gt: Genotype) -> Individual:
-        ind = cache.get(gt)
-        if ind is None:
-            ind = evaluate_genotype(
-                space,
-                gt,
-                decoder=config.decoder,
-                ilp_budget_s=config.ilp_budget_s,
-                pipelined=config.pipelined,
-            )
-            cache[gt] = ind
-            result.evaluations += 1
-        return ind
-
-    pop = [evaluate(fix(space.random(rng, mode))) for _ in range(config.population)]
-
-    def update_archive() -> None:
-        pool = result.archive + [i for i in pop if i.feasible]
-        objs = [i.objectives for i in pool]
-        nd = set(nondominated(objs))
-        seen = set()
-        archive = []
-        for i in pool:
-            if i.objectives in nd and i.objectives not in seen:
-                archive.append(i)
-                seen.add(i.objectives)
-        result.archive = archive
-
-    def rank_crowd(population: List[Individual]):
-        objs = [i.objectives for i in population]
-        fronts = fast_nondominated_sort(objs)
-        rank = {}
-        crowd = {}
-        for fi, front in enumerate(fronts):
-            rank.update({i: fi for i in front})
-            crowd.update(crowding_distance(objs, front))
-        return rank, crowd
-
-    def tournament(rank, crowd) -> Individual:
-        i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
-        if (rank[i], -crowd.get(i, 0.0)) <= (rank[j], -crowd.get(j, 0.0)):
-            return pop[i]
-        return pop[j]
-
-    update_archive()
-    result.history.append([i.objectives for i in result.archive])
-
-    for gen in range(config.generations):
-        if config.time_budget_s and time.monotonic() - t0 > config.time_budget_s:
-            break
-        rank, crowd = rank_crowd(pop)
-        offspring: List[Individual] = []
-        for _ in range(config.offspring):
-            p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
-            child = (
-                space.crossover(rng, p1.genotype, p2.genotype)
-                if rng.random() < config.crossover_rate
-                else p1.genotype
-            )
-            child = fix(space.mutate(rng, child, xi_mode=mode))
-            offspring.append(evaluate(child))
-        merged = pop + offspring
-        rank2, crowd2 = rank_crowd(merged)
-        # elitist μ+λ truncation by (rank, -crowding)
-        order = sorted(
-            range(len(merged)),
-            key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
+    own_engine = engine is None
+    if engine is None:
+        engine = EvaluationEngine(
+            GenotypeSpace(g, arch),
+            decoder=config.decoder,
+            ilp_budget_s=config.ilp_budget_s,
+            pipelined=config.pipelined,
+            cache_mode=config.cache_mode,
+            max_entries=config.cache_max_entries,
+            n_workers=config.n_workers,
         )
-        pop = [merged[i] for i in order[: config.population]]
+    else:
+        if engine.space.g is not g and engine.space.g.signature() != g.signature():
+            raise ValueError(
+                "engine was built for a different application graph "
+                f"({engine.space.g.name!r} vs {g.name!r})"
+            )
+        if (
+            engine.space.arch is not arch
+            and engine.space.arch.signature() != arch.signature()
+        ):
+            raise ValueError(
+                "engine was built for a different architecture "
+                f"({engine.space.arch.name!r} vs {arch.name!r})"
+            )
+    space = engine.space
+    ev0, hit0, miss0 = engine.evaluations, engine.hits, engine.misses
+
+    try:
+        def fix(gt: Genotype) -> Genotype:
+            if mode == "never":
+                return space.force_xi(gt, 0)
+            if mode == "always":
+                return space.force_xi(gt, 1)
+            return gt
+
+        pop = engine.evaluate_batch(
+            [fix(space.random(rng, mode)) for _ in range(config.population)]
+        )
+
+        def update_archive() -> None:
+            pool = result.archive + [i for i in pop if i.feasible]
+            objs = [i.objectives for i in pool]
+            nd = set(nondominated(objs))
+            seen = set()
+            archive = []
+            for i in pool:
+                if i.objectives in nd and i.objectives not in seen:
+                    archive.append(i)
+                    seen.add(i.objectives)
+            result.archive = archive
+
+        def rank_crowd(population: List[Individual]):
+            objs = [i.objectives for i in population]
+            fronts = fast_nondominated_sort(objs)
+            rank = {}
+            crowd = {}
+            for fi, front in enumerate(fronts):
+                rank.update({i: fi for i in front})
+                crowd.update(crowding_distance(objs, front))
+            return rank, crowd
+
+        def tournament(rank, crowd) -> Individual:
+            i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
+            if (rank[i], -crowd.get(i, 0.0)) <= (rank[j], -crowd.get(j, 0.0)):
+                return pop[i]
+            return pop[j]
+
         update_archive()
         result.history.append([i.objectives for i in result.archive])
-        if on_generation:
-            on_generation(gen, result)
 
+        for gen in range(config.generations):
+            if config.time_budget_s and time.monotonic() - t0 > config.time_budget_s:
+                break
+            rank, crowd = rank_crowd(pop)
+            # Create the whole brood first (RNG order identical to evaluating
+            # one-by-one — evaluation never draws from rng), then decode as one
+            # memoized, possibly parallel batch.
+            children: List[Genotype] = []
+            for _ in range(config.offspring):
+                p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
+                child = (
+                    space.crossover(rng, p1.genotype, p2.genotype)
+                    if rng.random() < config.crossover_rate
+                    else p1.genotype
+                )
+                children.append(fix(space.mutate(rng, child, xi_mode=mode)))
+            offspring = engine.evaluate_batch(children)
+            merged = pop + offspring
+            rank2, crowd2 = rank_crowd(merged)
+            # elitist μ+λ truncation by (rank, -crowding)
+            order = sorted(
+                range(len(merged)),
+                key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
+            )
+            pop = [merged[i] for i in order[: config.population]]
+            update_archive()
+            result.history.append([i.objectives for i in result.archive])
+            if on_generation:
+                on_generation(gen, result)
+
+        result.evaluations = engine.evaluations - ev0
+        result.cache_hits = engine.hits - hit0
+        result.cache_misses = engine.misses - miss0
+    finally:
+        if own_engine:
+            engine.close()
     result.wall_s = time.monotonic() - t0
     return result

@@ -1,0 +1,301 @@
+"""Memoized, optionally process-parallel genotype evaluation engine.
+
+NSGA-II's elitist μ+λ loop re-visits genotypes constantly (crossover of
+similar parents, zero-mutation clones, forced-ξ strategies), and decoding a
+genotype — Algorithm 1 + channel binding + CAPS-HMS/exact period search —
+is by far the hot path of `run_dse`.  This engine factors evaluation out of
+the MOEA loop and adds two orthogonal accelerations, both preserving
+bit-identical Pareto fronts:
+
+**Content-addressed phenotype-decode cache.**  The decoder's inputs are not
+the raw genotype: when ξ(a_m) = 1 the multi-cast actor a_m is *removed*
+(its β_A gene is dead) and its member channels collapse into one MRB whose
+placement decision comes solely from the alphabetically-first member's C_d
+gene (see ``evaluate_genotype``) — the other member genes are dead too.
+:func:`decode_key` projects a genotype onto exactly the decoder-visible
+alleles, so all genotypes in the same fiber share one decode.  Keys are
+hashed (SHA-256 over the canonical projection) so entries are
+content-addressed and cheap to hold.  ``cache_mode``:
+
+  * ``"canonical"``  (default) key = decoder-visible projection — strictly
+    more hits than the historical per-run dict;
+  * ``"exact"``      key = raw genotype — reproduces the seed `run_dse`
+    memoization decision-for-decision (regression baseline);
+  * ``"none"``       every request decodes (ablation baseline).
+
+**ξ-graph transform cache.**  The Algorithm-1 substitution (plus pipeline
+delays) depends only on the ξ bits, yet re-decoding pays two full graph
+deep-copies per genotype.  The engine memoizes ``transformed_graph`` per ξ
+pattern (small LRU — the MOEA visits few patterns at a time) and hands the
+decoders a shared read-only graph.  This accelerates *all* cache modes,
+including ``"none"``'s per-request decodes.
+
+**Process-parallel batch evaluation.**  ``n_workers > 0`` decodes cache
+misses of a batch in a ``ProcessPoolExecutor``.  Results are merged back in
+input order, so the evolution trajectory (and hence the front) is identical
+to the serial run — decode order never feeds back into the RNG stream.
+
+The engine may outlive one `run_dse` call: sharing it across strategy runs
+(e.g. Reference and MRB_Explore on the same app) deduplicates the forced-ξ
+fibers across the whole experiment matrix.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .dse import (
+    Genotype,
+    GenotypeSpace,
+    Individual,
+    evaluate_genotype,
+    transformed_graph,
+)
+
+__all__ = ["EvaluationEngine", "decode_key", "CACHE_MODES"]
+
+CACHE_MODES = ("canonical", "exact", "none")
+
+_DEAD = -1  # sentinel for alleles the decoder never reads
+
+
+def _mc_dead_indices(space: GenotypeSpace) -> List[Tuple[int, List[int]]]:
+    """Per multi-cast actor: (its β_A gene index, the C_d gene indices that
+    die when it is replaced).  Member ordering matches mrb_channel_name —
+    the MRB inherits the alphabetically-first member's decision; the other
+    member genes are dead."""
+    ch_idx = {c: i for i, c in enumerate(space.channels)}
+    a_idx = {a: i for i, a in enumerate(space.actors)}
+    out = []
+    for a in space.mcast:
+        members = sorted(space.g.in_channels(a) + space.g.out_channels(a))
+        out.append((a_idx[a], [ch_idx[c] for c in members[1:]]))
+    return out
+
+
+def decode_key(
+    space: GenotypeSpace,
+    genotype: Genotype,
+    dead_map: Optional[List[Tuple[int, List[int]]]] = None,
+) -> Tuple:
+    """Project a genotype onto its decoder-visible alleles.
+
+    Two genotypes with equal keys produce identical transformed graphs,
+    channel decisions, and actor bindings — hence identical phenotypes.
+    """
+    if dead_map is None:
+        dead_map = _mc_dead_indices(space)
+    cd = list(genotype.cd)
+    ba = [v % len(space.allowed[a]) for a, v in zip(space.actors, genotype.ba)]
+    for bit, (ai, ch_is) in zip(genotype.xi, dead_map):
+        if not bit:
+            continue
+        ba[ai] = _DEAD
+        for ci in ch_is:
+            cd[ci] = _DEAD
+    return (genotype.xi, tuple(cd), tuple(ba))
+
+
+def _digest(key: Tuple) -> str:
+    return hashlib.sha256(repr(key).encode()).hexdigest()
+
+
+# --- process-pool worker plumbing (module level so it pickles) -------------
+_WORKER_ARGS: Optional[Tuple] = None
+_WORKER_GT: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()  # per-process ξ cache
+
+
+def _init_worker(space, decoder, ilp_budget_s, pipelined) -> None:
+    global _WORKER_ARGS
+    _WORKER_ARGS = (space, decoder, ilp_budget_s, pipelined)
+    _WORKER_GT.clear()
+
+
+def _eval_worker(genotype: Genotype) -> Individual:
+    space, decoder, ilp_budget_s, pipelined = _WORKER_ARGS  # type: ignore[misc]
+    gt = _WORKER_GT.get(genotype.xi)
+    if gt is None:
+        gt = transformed_graph(space, genotype.xi, pipelined)
+        _WORKER_GT[genotype.xi] = gt
+        if len(_WORKER_GT) > 64:
+            _WORKER_GT.popitem(last=False)
+    return evaluate_genotype(
+        space,
+        genotype,
+        decoder=decoder,
+        ilp_budget_s=ilp_budget_s,
+        pipelined=pipelined,
+        transformed=gt,
+    )
+
+
+class EvaluationEngine:
+    """Decode cache + batch evaluator bound to one :class:`GenotypeSpace`."""
+
+    def __init__(
+        self,
+        space: GenotypeSpace,
+        *,
+        decoder: str = "caps_hms",
+        ilp_budget_s: float = 3.0,
+        pipelined: bool = True,
+        cache_mode: str = "canonical",
+        max_entries: Optional[int] = None,
+        n_workers: int = 0,
+        transform_cache: int = 64,
+    ) -> None:
+        if cache_mode not in CACHE_MODES:
+            raise ValueError(f"cache_mode must be one of {CACHE_MODES}")
+        self.space = space
+        self.decoder = decoder
+        self.ilp_budget_s = ilp_budget_s
+        self.pipelined = pipelined
+        self.cache_mode = cache_mode
+        self.max_entries = max_entries
+        self.n_workers = n_workers
+        self.hits = 0
+        self.misses = 0
+        self.evaluations = 0  # decodes actually performed
+        self._cache: "OrderedDict[str, Individual]" = OrderedDict()
+        self._dead_map = _mc_dead_indices(space)
+        # ξ → transformed graph; bounded (2^|A_M| patterns exist in theory).
+        self._gt_lru: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()
+        self._gt_lru_max = transform_cache
+        self._pool = None
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __enter__(self) -> "EvaluationEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            from concurrent.futures import ProcessPoolExecutor
+
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.n_workers,
+                initializer=_init_worker,
+                initargs=(self.space, self.decoder, self.ilp_budget_s, self.pipelined),
+            )
+        return self._pool
+
+    # ----------------------------------------------------------------- core
+    def _key(self, genotype: Genotype) -> Optional[str]:
+        if self.cache_mode == "none":
+            return None
+        if self.cache_mode == "exact":
+            return _digest((genotype.xi, genotype.cd, genotype.ba))
+        return _digest(decode_key(self.space, genotype, self._dead_map))
+
+    def _transformed(self, xi: Tuple[int, ...]):
+        if self._gt_lru_max <= 0:
+            return transformed_graph(self.space, xi, self.pipelined)
+        gt = self._gt_lru.get(xi)
+        if gt is None:
+            gt = transformed_graph(self.space, xi, self.pipelined)
+            self._gt_lru[xi] = gt
+            if len(self._gt_lru) > self._gt_lru_max:
+                self._gt_lru.popitem(last=False)
+        else:
+            self._gt_lru.move_to_end(xi)
+        return gt
+
+    def _decode(self, genotype: Genotype) -> Individual:
+        self.evaluations += 1
+        return evaluate_genotype(
+            self.space,
+            genotype,
+            decoder=self.decoder,
+            ilp_budget_s=self.ilp_budget_s,
+            pipelined=self.pipelined,
+            transformed=self._transformed(genotype.xi),
+        )
+
+    def _wrap(self, genotype: Genotype, cached: Individual) -> Individual:
+        # A canonical hit may come from a sibling genotype in the same
+        # decode fiber: the phenotype is shared, the identity is not.
+        if cached.genotype == genotype:
+            return cached
+        return Individual(genotype, cached.objectives, cached.schedule)
+
+    def _store(self, key: str, ind: Individual) -> None:
+        self._cache[key] = ind
+        if self.max_entries is not None and len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)  # FIFO eviction; decode is pure
+
+    def evaluate(self, genotype: Genotype) -> Individual:
+        key = self._key(genotype)
+        if key is None:
+            return self._decode(genotype)
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.hits += 1
+            return self._wrap(genotype, cached)
+        self.misses += 1
+        ind = self._decode(genotype)
+        self._store(key, ind)
+        return ind
+
+    def evaluate_batch(self, genotypes: Sequence[Genotype]) -> List[Individual]:
+        """Evaluate a batch, memoized, in input order.
+
+        With ``n_workers > 0`` the unique cache misses are decoded in a
+        process pool; the merge is order-deterministic, so results are
+        independent of worker scheduling.
+        """
+        if self.n_workers <= 0:
+            return [self.evaluate(gt) for gt in genotypes]
+
+        if self.cache_mode == "none":
+            pool = self._ensure_pool()
+            out = list(pool.map(_eval_worker, genotypes))
+            self.evaluations += len(genotypes)
+            return out
+
+        keys = [self._key(gt) for gt in genotypes]
+        miss_order: List[str] = []
+        miss_geno: Dict[str, Genotype] = {}
+        for gt, key in zip(genotypes, keys):
+            if key in self._cache or key in miss_geno:
+                continue
+            miss_order.append(key)
+            miss_geno[key] = gt
+        if miss_order:
+            pool = self._ensure_pool()
+            decoded = list(pool.map(_eval_worker, [miss_geno[k] for k in miss_order]))
+            self.evaluations += len(miss_order)
+            for key, ind in zip(miss_order, decoded):
+                self._store(key, ind)
+        out: List[Individual] = []
+        fallback = 0
+        for gt, key in zip(genotypes, keys):
+            cached = self._cache.get(key)
+            if cached is None:
+                # Evicted within this batch (tiny max_entries): decode inline.
+                fallback += 1
+                cached = self._decode(gt)
+                self._store(key, cached)
+            out.append(self._wrap(gt, cached))
+        # Hit/miss accounting mirrors the serial path; eviction-fallback
+        # decodes are misses, not hits.
+        self.misses += len(miss_order) + fallback
+        self.hits += len(genotypes) - len(miss_order) - fallback
+        return out
+
+    # ------------------------------------------------------------ reporting
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evaluations": self.evaluations,
+            "entries": len(self._cache),
+        }

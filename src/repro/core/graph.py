@@ -208,6 +208,60 @@ class ApplicationGraph:
         """M_F = Σ_c γ(c)·φ(c) (paper Eq. 24)."""
         return sum(ch.bytes for ch in self.channels.values())
 
+    # ------------------------------------------------------------- serialize
+    def to_dict(self) -> Dict:
+        """Plain-data form (JSON-safe); inverse of :meth:`from_dict`."""
+        return {
+            "name": self.name,
+            "actors": {
+                a: {"exec_times": dict(v.exec_times), "multicast": v.multicast}
+                for a, v in sorted(self.actors.items())
+            },
+            "channels": {
+                c: {
+                    "src": self.producer[c],
+                    "dsts": list(self.consumers[c]),
+                    "delay": ch.delay,
+                    "capacity": ch.capacity,
+                    "token_bytes": ch.token_bytes,
+                    "is_mrb": ch.is_mrb,
+                    "prod_rate": self.prod_rate[(self.producer[c], c)],
+                    "cons_rates": {r: self.cons_rate[(c, r)] for r in self.consumers[c]},
+                }
+                for c, ch in sorted(self.channels.items())
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ApplicationGraph":
+        g = cls(d.get("name", "app"))
+        for a, spec in d["actors"].items():
+            g.add_actor(a, spec["exec_times"], multicast=spec.get("multicast", False))
+        for c, spec in d["channels"].items():
+            g.add_channel(
+                c,
+                spec["src"],
+                spec["dsts"],
+                delay=spec.get("delay", 0),
+                capacity=spec.get("capacity", 1),
+                token_bytes=spec.get("token_bytes", 1),
+                is_mrb=spec.get("is_mrb", False),
+                prod_rate=spec.get("prod_rate", 1),
+                cons_rates=spec.get("cons_rates"),
+            )
+        return g
+
+    def signature(self) -> str:
+        """Stable content digest of the graph structure (order-independent,
+        name excluded): equal signatures ⇔ structurally identical graphs."""
+        import hashlib
+        import json
+
+        d = self.to_dict()
+        d.pop("name", None)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
 
 def satisfies_multicast_structure(g: ApplicationGraph, a: str) -> bool:
     """Structural conditions Eqs. (1)-(3): exactly one input channel, ≥1

@@ -32,6 +32,20 @@ __all__ = ["CompressedTrainState", "make_compressed_dp_train_step"]
 Pytree = Any
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map`` (check_vma) on new
+    releases, ``jax.experimental.shard_map`` (check_rep) on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
 class CompressedTrainState(NamedTuple):
     params: Pytree
     opt: OptState
@@ -84,9 +98,8 @@ def make_compressed_dp_train_step(
             CompressedTrainState(P(), OptState(P(), P()), P()),
             {"loss": P(), "grad_norm": P()},
         )
-        fn = jax.shard_map(
+        fn = _shard_map(
             per_replica, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
         )
         return fn(state, batch)
 

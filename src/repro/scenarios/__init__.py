@@ -1,0 +1,31 @@
+"""Scenario subsystem: deterministic families of SDF application graphs and
+heterogeneous architectures, serializable specs, and sampling strategies for
+property-based testing and scaling sweeps (see README "Scenario subsystem")."""
+from .archs import ArchParams, NOC_PROFILES, generate_architecture
+from .families import FAMILIES, build, exec_times
+from .spec import AppSpec, Scenario, scenario_from_json, validate_scenario
+from .strategies import (
+    PARAM_RANGES,
+    sample_app_spec,
+    sample_arch_params,
+    sample_scenario,
+    sample_scenarios,
+)
+
+__all__ = [
+    "ArchParams",
+    "NOC_PROFILES",
+    "generate_architecture",
+    "FAMILIES",
+    "build",
+    "exec_times",
+    "AppSpec",
+    "Scenario",
+    "scenario_from_json",
+    "validate_scenario",
+    "PARAM_RANGES",
+    "sample_app_spec",
+    "sample_arch_params",
+    "sample_scenario",
+    "sample_scenarios",
+]

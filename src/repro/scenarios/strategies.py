@@ -1,0 +1,105 @@
+"""Scenario sampling for tests and sweeps.
+
+Two entry points with identical semantics:
+
+  * :func:`sample_scenarios` — deterministic seeded sampler, dependency-free;
+    the property-test harness uses it directly so invariants are exercised
+    even where `hypothesis` is absent.
+  * :func:`scenario_strategy` / :func:`app_spec_strategy` — real hypothesis
+    strategies (CI path), built from the same parameter ranges, so both
+    paths explore the same scenario space.
+
+Parameter ranges are deliberately small: the point is *many diverse small
+graphs* that decode in milliseconds, not a few big ones.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from .archs import NOC_PROFILES, TYPE_MIXES, ArchParams
+from .families import FAMILIES
+from .spec import AppSpec, Scenario
+
+__all__ = [
+    "PARAM_RANGES",
+    "sample_app_spec",
+    "sample_arch_params",
+    "sample_scenario",
+    "sample_scenarios",
+    "app_spec_strategy",
+    "scenario_strategy",
+]
+
+# Per-family parameter ranges: name -> (choices...) drawn uniformly.
+PARAM_RANGES: Dict[str, Dict[str, Sequence[Any]]] = {
+    "multicast_tree": {"depth": (1, 2), "fanout": (2, 3)},
+    "split_join": {"branches": (2, 3, 4), "stages": (1, 2), "fork_prob": (0.0, 0.5, 1.0)},
+    "stencil_chain": {"length": (1, 2, 3), "taps": (2, 3)},
+    "camera_pipeline": {"cameras": (1, 2), "chain": (2, 3, 4), "tap_width": (1, 2)},
+    "random_dag": {
+        "n_actors": (4, 6, 8, 10),
+        "width": (2, 3),
+        "multicast_density": (0.0, 0.4, 1.0),
+    },
+}
+
+ARCH_RANGES: Dict[str, Sequence[Any]] = {
+    "tiles": (1, 2, 3),
+    "cores_per_tile": (2, 3, 4),
+    "type_mix": TYPE_MIXES,
+    "noc_profile": tuple(NOC_PROFILES),
+    "core_local_kib": (256, 512),
+    "tile_local_kib": (4 * 1024, 8 * 1024),
+}
+
+
+def sample_app_spec(rng: random.Random, family: Optional[str] = None) -> AppSpec:
+    fam = family or rng.choice(sorted(FAMILIES))
+    params = {k: rng.choice(list(v)) for k, v in PARAM_RANGES[fam].items()}
+    return AppSpec.make(fam, seed=rng.randrange(1_000_000), **params)
+
+
+def sample_arch_params(rng: random.Random) -> ArchParams:
+    return ArchParams(**{k: rng.choice(list(v)) for k, v in ARCH_RANGES.items()})
+
+
+def sample_scenario(rng: random.Random, family: Optional[str] = None) -> Scenario:
+    return Scenario(
+        app=sample_app_spec(rng, family),
+        arch=sample_arch_params(rng),
+        arch_seed=rng.randrange(1_000_000),
+    )
+
+
+def sample_scenarios(
+    seed: int, n: int, families: Optional[Sequence[str]] = None
+) -> List[Scenario]:
+    """Deterministic list of ``n`` scenarios cycling over ``families``
+    (default: all registered families)."""
+    rng = random.Random(f"scenarios:{seed}")
+    fams = list(families or sorted(FAMILIES))
+    return [sample_scenario(rng, fams[i % len(fams)]) for i in range(n)]
+
+
+# ----------------------------------------------------------------- hypothesis
+def app_spec_strategy(family: Optional[str] = None):
+    """Hypothesis strategy over :class:`AppSpec` (requires hypothesis)."""
+    from hypothesis import strategies as st
+
+    def from_seed(fam: str, seed: int) -> AppSpec:
+        return sample_app_spec(random.Random(f"hyp:{fam}:{seed}"), fam)
+
+    fams = st.just(family) if family else st.sampled_from(sorted(FAMILIES))
+    return st.builds(from_seed, fams, st.integers(0, 10_000))
+
+
+def scenario_strategy(family: Optional[str] = None):
+    """Hypothesis strategy over full :class:`Scenario` specs."""
+    from hypothesis import strategies as st
+
+    def from_seed(fam: str, seed: int) -> Scenario:
+        return sample_scenario(random.Random(f"hyp:{fam}:{seed}"), fam)
+
+    fams = st.just(family) if family else st.sampled_from(sorted(FAMILIES))
+    return st.builds(from_seed, fams, st.integers(0, 10_000))

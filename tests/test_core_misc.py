@@ -1,7 +1,9 @@
 """Graph transform (Alg. 1), channel binding (Alg. 2), Pareto machinery,
 and the Table-1 benchmark applications."""
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is a declared dev dependency (requirements-dev.txt); where it
+# is absent the proptest driver runs the same properties deterministically.
+from repro.scenarios.proptest import given, settings, st
 
 from repro.core import (
     APPLICATIONS,

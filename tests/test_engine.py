@@ -1,0 +1,171 @@
+"""Evaluation engine: content-addressed decode cache, parallel evaluator,
+decoder parity on generated graphs, and the seed-front regression."""
+import random
+
+import pytest
+
+from repro.core import (
+    DSEConfig,
+    EvaluationEngine,
+    GenotypeSpace,
+    decode_key,
+    evaluate_genotype,
+    paper_architecture,
+    run_dse,
+    sobel,
+)
+from repro.core.dse import Genotype
+from repro.core.caps_hms import decode_via_heuristic
+from repro.core.ilp import decode_via_ilp
+from repro.scenarios import sample_scenario
+from repro.scenarios.proptest import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def sobel_space():
+    return GenotypeSpace(sobel(), paper_architecture())
+
+
+# --------------------------------------------------------------- decode key
+def test_decode_key_collapses_dead_alleles(sobel_space):
+    """With ξ=1 the multi-cast actor's β_A gene and all member-channel C_d
+    genes except the alphabetically-first member's are decoder-invisible."""
+    sp = sobel_space
+    mc = sp.mcast[0]
+    members = sorted(sp.g.in_channels(mc) + sp.g.out_channels(mc))
+    live, dead = members[0], members[1]
+    i_live, i_dead = sp.channels.index(live), sp.channels.index(dead)
+    i_mc = sp.actors.index(mc)
+
+    base = Genotype((1,), (0,) * len(sp.channels), (0,) * len(sp.actors))
+
+    def mutate_cd(gt, idx, v):
+        cd = list(gt.cd)
+        cd[idx] = v
+        return Genotype(gt.xi, tuple(cd), gt.ba)
+
+    def mutate_ba(gt, idx, v):
+        ba = list(gt.ba)
+        ba[idx] = v
+        return Genotype(gt.xi, gt.cd, tuple(ba))
+
+    assert decode_key(sp, base) == decode_key(sp, mutate_cd(base, i_dead, 3))
+    assert decode_key(sp, base) == decode_key(sp, mutate_ba(base, i_mc, 5))
+    assert decode_key(sp, base) != decode_key(sp, mutate_cd(base, i_live, 3))
+    # with ξ=0 every allele is live
+    kept = Genotype((0,), base.cd, base.ba)
+    assert decode_key(sp, kept) != decode_key(sp, mutate_cd(kept, i_dead, 3))
+    assert decode_key(sp, kept) != decode_key(sp, mutate_ba(kept, i_mc, 5))
+
+
+def test_canonical_hit_shares_phenotype_keeps_identity(sobel_space):
+    sp = sobel_space
+    eng = EvaluationEngine(sp, cache_mode="canonical")
+    mc = sp.mcast[0]
+    dead = sorted(sp.g.in_channels(mc) + sp.g.out_channels(mc))[1]
+    i_dead = sp.channels.index(dead)
+    g1 = Genotype((1,), (0,) * len(sp.channels), (0,) * len(sp.actors))
+    cd2 = list(g1.cd)
+    cd2[i_dead] = 2
+    g2 = Genotype(g1.xi, tuple(cd2), g1.ba)
+
+    a = eng.evaluate(g1)
+    b = eng.evaluate(g2)
+    assert eng.stats()["evaluations"] == 1 and eng.hits == 1
+    assert b.objectives == a.objectives
+    assert b.genotype == g2  # identity preserved for crossover/mutation
+    # and the shared phenotype equals a fresh decode of g2
+    fresh = evaluate_genotype(sp, g2)
+    assert fresh.objectives == b.objectives
+
+
+def test_engine_matches_direct_evaluation(sobel_space):
+    sp = sobel_space
+    rng = random.Random(0)
+    eng = EvaluationEngine(sp)
+    for _ in range(10):
+        gt = sp.random(rng)
+        assert eng.evaluate(gt).objectives == evaluate_genotype(sp, gt).objectives
+
+
+def test_cache_eviction_bounded(sobel_space):
+    sp = sobel_space
+    rng = random.Random(2)
+    eng = EvaluationEngine(sp, max_entries=4)
+    for _ in range(12):
+        eng.evaluate(sp.random(rng))
+    assert eng.stats()["entries"] <= 4
+
+
+# ------------------------------------------------- run_dse regression suite
+GOLDEN_CFG = dict(strategy="MRB_Explore", population=12, offspring=6, generations=4, seed=7)
+# Front produced by the seed's run_dse (pre-engine, commit 0dad972) on this
+# exact config — the memoized engine must reproduce it bit-for-bit.
+GOLDEN_FRONT = [
+    (15864.0, 58017000.0, 5.0),
+    (17303.0, 58017000.0, 4.0),
+    (23097.0, 60090600.0, 3.5),
+]
+
+
+def test_memoized_engine_reproduces_seed_front_bit_for_bit():
+    g, arch = sobel(), paper_architecture()
+    res = run_dse(g, arch, DSEConfig(**GOLDEN_CFG, cache_mode="canonical"))
+    assert res.front == GOLDEN_FRONT
+
+
+def test_all_cache_modes_and_parallelism_agree():
+    g, arch = sobel(), paper_architecture()
+    runs = {
+        mode: run_dse(g, arch, DSEConfig(**GOLDEN_CFG, cache_mode=mode))
+        for mode in ("none", "exact", "canonical")
+    }
+    par = run_dse(g, arch, DSEConfig(**GOLDEN_CFG, cache_mode="canonical", n_workers=2))
+    fronts = {m: r.front for m, r in runs.items()}
+    assert fronts["none"] == fronts["exact"] == fronts["canonical"] == par.front
+    assert runs["none"].history == runs["exact"].history == runs["canonical"].history == par.history
+    # canonical can only fold more decodes than exact, never fewer
+    assert runs["canonical"].evaluations <= runs["exact"].evaluations <= runs["none"].evaluations
+    assert runs["canonical"].cache_hits >= runs["exact"].cache_hits
+
+
+def test_shared_engine_across_strategy_runs():
+    """One engine shared across strategy runs dedups forced-ξ fibers; the
+    fronts stay identical to isolated runs."""
+    g, arch = sobel(), paper_architecture()
+    cfg = lambda s: DSEConfig(strategy=s, population=10, offspring=5, generations=3, seed=5)
+    isolated = {s: run_dse(g, arch, cfg(s)).front for s in ("Reference", "MRB_Explore")}
+    with EvaluationEngine(GenotypeSpace(g, arch)) as eng:
+        shared_ref = run_dse(g, arch, cfg("Reference"), engine=eng)
+        shared_exp = run_dse(g, arch, cfg("MRB_Explore"), engine=eng)
+    assert shared_ref.front == isolated["Reference"]
+    assert shared_exp.front == isolated["MRB_Explore"]
+    # The second run starts warm: some of its decodes were already cached.
+    assert shared_exp.cache_hits > 0
+
+
+# ------------------------------------------------------ decoder differential
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ilp_never_worse_than_heuristic_on_generated_graphs(seed):
+    """Differential property on small generated scenarios: both decoders
+    agree on feasibility and the exact decoder's period is ≤ CAPS-HMS's
+    whenever its search completes (proven optimal)."""
+    rng = random.Random(f"parity:{seed}")
+    sc = sample_scenario(rng, family="random_dag")
+    g, arch = sc.build()
+    if len(g.actors) > 8:  # keep the exact search tractable
+        g, arch = sample_scenario(random.Random(f"parity:{seed}:small"), "stencil_chain").build()
+    cores = sorted(arch.cores)
+    ba = {
+        a: rng.choice([p for p in cores if g.actors[a].can_run_on(arch.cores[p].ctype)])
+        for a in g.actors
+    }
+    from repro.core.binding import CHANNEL_DECISIONS
+
+    cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
+    h = decode_via_heuristic(g, arch, cd, ba)
+    e = decode_via_ilp(g, arch, cd, ba, time_budget_s=3.0)
+    assert h.feasible == e.feasible
+    if e.feasible and e.proven_optimal:
+        assert e.period <= h.period

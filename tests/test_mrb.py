@@ -1,7 +1,9 @@
 """MRB semantics (paper §II-C): the Fig. 3 trace and the FIFO-equivalence
 property that justifies the whole construction."""
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is a declared dev dependency (requirements-dev.txt); where it
+# is absent the proptest driver runs the same properties deterministically.
+from repro.scenarios.proptest import given, settings, st
 
 from repro.core.mrb import (
     MRBState,

@@ -1,0 +1,211 @@
+"""Scenario subsystem: family coverage, determinism, serialization, and
+property-based scheduler/MRB invariants over generated scenarios.
+
+Properties run through repro.scenarios.proptest: real hypothesis in CI,
+deterministic seeded sampling where hypothesis is absent.
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    ApplicationGraph,
+    ArchitectureGraph,
+    multicast_actors,
+    substitute_mrbs,
+)
+from repro.core.binding import CHANNEL_DECISIONS
+from repro.core.caps_hms import decode_via_heuristic
+from repro.core.schedule import (
+    attach_binding,
+    comm_times,
+    period_lower_bound,
+    validate_schedule,
+)
+from repro.scenarios import (
+    FAMILIES,
+    ArchParams,
+    Scenario,
+    generate_architecture,
+    sample_scenario,
+    sample_scenarios,
+    scenario_from_json,
+    validate_scenario,
+)
+from repro.scenarios.proptest import given, settings, st
+
+
+# ----------------------------------------------------------------- coverage
+def test_at_least_five_distinct_families():
+    assert len(FAMILIES) >= 5
+    assert len(set(FAMILIES)) == len(FAMILIES)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_family_generates_valid_graphs(family):
+    """Every family yields ApplicationGraph-invariant-clean graphs with
+    legal multi-cast actors across a spread of seeds."""
+    for sc in sample_scenarios(seed=7, n=6, families=[family]):
+        g, arch = sc.build()
+        validate_scenario(g, arch)
+        assert len(g.actors) >= 2 and len(g.channels) >= 1
+
+
+def test_families_reach_multicast_actors():
+    """The generator must actually exercise the paper's subject: across a
+    modest sample, every family except pure chains yields |A_M| > 0."""
+    for family in sorted(FAMILIES):
+        total_mc = sum(
+            len(multicast_actors(sc.build()[0]))
+            for sc in sample_scenarios(seed=1, n=8, families=[family])
+        )
+        assert total_mc > 0, f"family {family} never produced a multi-cast actor"
+
+
+# -------------------------------------------------------------- determinism
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_spec_build_is_deterministic(family):
+    sc = sample_scenarios(seed=13, n=1, families=[family])[0]
+    g1, a1 = sc.build()
+    g2, a2 = sc.build()
+    assert g1.signature() == g2.signature()
+    assert a1.signature() == a2.signature()
+
+
+def test_different_seeds_differ():
+    a = sample_scenarios(seed=0, n=1, families=["random_dag"])[0]
+    b = sample_scenarios(seed=1, n=1, families=["random_dag"])[0]
+    assert a.app != b.app or a.arch != b.arch
+
+
+def test_scenario_json_roundtrip():
+    for sc in sample_scenarios(seed=3, n=5):
+        sc2 = scenario_from_json(sc.dumps())
+        assert sc2 == sc
+        g1, a1 = sc.build()
+        g2, a2 = sc2.build()
+        assert g1.signature() == g2.signature()
+        assert a1.signature() == a2.signature()
+
+
+def test_application_graph_dict_roundtrip():
+    g, _ = sample_scenarios(seed=5, n=1, families=["camera_pipeline"])[0].build()
+    g2 = ApplicationGraph.from_dict(g.to_dict())
+    assert g2.signature() == g.signature()
+    assert multicast_actors(g2) == multicast_actors(g)
+
+
+def test_architecture_dict_roundtrip():
+    arch = generate_architecture(ArchParams(tiles=3, cores_per_tile=4, noc_profile="irregular"), seed=2)
+    a2 = ArchitectureGraph.from_dict(arch.to_dict())
+    assert a2.signature() == arch.signature()
+    assert a2.route("p_T2_1", "q_global") == arch.route("p_T2_1", "q_global")
+
+
+def test_generated_arch_structure():
+    p = ArchParams(tiles=2, cores_per_tile=3, type_mix="hetero", noc_profile="thin_noc")
+    arch = generate_architecture(p, seed=0)
+    assert len(arch.tiles()) == 2
+    assert len(arch.cores) == 6
+    assert set(arch.core_types()) <= {"t1", "t2", "t3"}
+    # thin_noc: the NoC is strictly slower than every crossbar
+    noc_bw = arch.interconnects[arch.noc].bandwidth
+    for h, ic in arch.interconnects.items():
+        if ic.kind == "crossbar":
+            assert noc_bw < ic.bandwidth
+
+
+# ------------------------------------------- scheduler invariant properties
+def _random_binding(g, arch, rng):
+    cores = sorted(arch.cores)
+    ba = {
+        a: rng.choice([p for p in cores if g.actors[a].can_run_on(arch.cores[p].ctype)])
+        for a in g.actors
+    }
+    cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
+    return ba, cd
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_caps_hms_valid_on_generated_scenarios(seed):
+    """CAPS-HMS schedules of generated scenarios satisfy every paper
+    feasibility condition: no core/interconnect occupancy overlap after
+    f_wrap, reads inside [s_a − τ_EI, s_a), writes inside [s_a + τ_a,
+    s_a + τ_a + τ_EO), dependencies (Eqs. 16-18) — all via
+    validate_schedule — and P ≥ the resource lower bound."""
+    rng = random.Random(f"sched-prop:{seed}")
+    sc = sample_scenario(rng)
+    g, arch = sc.build()
+    ba, cd = _random_binding(g, arch, rng)
+    res = decode_via_heuristic(g, arch, cd, ba)
+    assert res.feasible, sc.name
+    sched = res.schedule
+    assert validate_schedule(g, arch, sched) == []
+    attach_binding(g, sched.channel_binding)
+    read_tau, write_tau = comm_times(g, arch, sched.actor_binding, sched.channel_binding)
+    lb = period_lower_bound(g, arch, sched.actor_binding, read_tau, write_tau)
+    assert sched.period >= lb
+    # each actor's τ_EI + τ_a + τ_EO window fits the period
+    for a in g.actors:
+        ctype = arch.cores[sched.actor_binding[a]].ctype
+        t_in = sum(read_tau[(c, a)] for c in g.in_channels(a))
+        t_out = sum(write_tau[(a, c)] for c in g.out_channels(a))
+        assert t_in + g.actors[a].exec_times[ctype] + t_out <= sched.period
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pipelined_mrb_decode_valid_on_generated_scenarios(seed):
+    """Same invariants after the DSE's actual transform chain: substitute
+    all MRBs, add pipeline delays, then decode."""
+    from repro.core.dse import pipeline_delays
+
+    rng = random.Random(f"sched-mrb-prop:{seed}")
+    sc = sample_scenario(rng)
+    g, arch = sc.build()
+    gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
+    ba, cd = _random_binding(gt, arch, rng)
+    res = decode_via_heuristic(gt, arch, cd, ba)
+    assert res.feasible, sc.name
+    assert validate_schedule(gt, arch, res.schedule) == []
+
+
+# -------------------------------------------------- MRB transform properties
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), partial=st.booleans())
+def test_mrb_substitution_never_increases_buffering(seed, partial):
+    """Algorithm 1 never increases total buffered tokens (Σ γ) or bytes
+    (Σ γ·φ) versus the multicast original, and preserves readers: the MRB's
+    reader list is exactly the concatenation of the replaced output
+    channels' readers."""
+    rng = random.Random(f"mrb-prop:{seed}")
+    sc = sample_scenario(rng)
+    g, _ = sc.build()
+    mcs = multicast_actors(g)
+    xi = {a: (rng.randint(0, 1) if partial else 1) for a in mcs}
+    gt = substitute_mrbs(g, xi)
+
+    assert sum(ch.capacity for ch in gt.channels.values()) <= sum(
+        ch.capacity for ch in g.channels.values()
+    )
+    assert sum(ch.capacity * ch.token_bytes for ch in gt.channels.values()) <= sum(
+        ch.capacity * ch.token_bytes for ch in g.channels.values()
+    )
+
+    replaced = [a for a in mcs if xi[a]]
+    assert sorted(multicast_actors(gt)) == sorted(a for a in mcs if not xi[a])
+    assert len(gt.actors) == len(g.actors) - len(replaced)
+    for a in replaced:
+        outs = g.out_channels(a)
+        mrb_name = "mrb{" + ",".join(sorted(g.in_channels(a) + outs)) + "}"
+        ch = gt.channels[mrb_name]
+        assert ch.is_mrb
+        expected_readers = sorted(r for c in outs for r in g.consumers[c])
+        assert sorted(gt.consumers[mrb_name]) == expected_readers
+        # γ(c_m) = γ(c_in) + γ(c_out) (Fig. 2), φ inherited from c_in
+        cin = g.channels[g.in_channels(a)[0]]
+        cout = g.channels[outs[0]]
+        assert ch.capacity == cin.capacity + cout.capacity
+        assert ch.token_bytes == cin.token_bytes
+        assert ch.delay == cin.delay

@@ -3,7 +3,9 @@ invariants for both decoders on random graphs."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is a declared dev dependency (requirements-dev.txt); where it
+# is absent the proptest driver runs the same properties deterministically.
+from repro.scenarios.proptest import given, settings, st
 
 from repro.core.architecture import ArchitectureGraph
 from repro.core.caps_hms import decode_via_heuristic

@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is a declared dev dependency (requirements-dev.txt); where it
+# is absent the proptest driver runs the same properties deterministically.
+from repro.scenarios.proptest import given, settings, st
 
 from repro.ckpt import CheckpointManager, latest_step, restore_pytree, save_pytree
 from repro.configs import get_config
