@@ -24,15 +24,13 @@ import time
 
 from repro.core import (
     APPLICATIONS,
-    DSEConfig,
+    ExplorationProblem,
+    NSGA2Explorer,
     STRATEGIES,
     nondominated,
     paper_architecture,
     relative_hypervolume,
-    run_dse,
 )
-from repro.core.dse import GenotypeSpace
-from repro.core.engine import EvaluationEngine
 
 # (generations, population, offspring, ilp_budget, include_ilp)
 SCALE = {
@@ -83,21 +81,16 @@ def run(report, out_dir="runs/dse"):
         for strategy in STRATEGIES:
             for decoder in (("caps_hms", "ilp") if with_ilp else ("caps_hms",)):
                 tag = f"{strategy}^{decoder}"
-                t0 = time.monotonic()
-                res = run_dse(
-                    g,
-                    arch,
-                    DSEConfig(
-                        strategy=strategy,
-                        decoder=decoder,
-                        population=pop,
-                        offspring=off,
-                        generations=gens,
-                        ilp_budget_s=ilp_s,
-                        seed=11,
-                        time_budget_s=420 if decoder == "ilp" else 240,
-                    ),
+                problem = ExplorationProblem(
+                    graph=g, arch=arch, strategy=strategy, decoder=decoder,
+                    ilp_budget_s=ilp_s,
                 )
+                explorer = NSGA2Explorer(
+                    population=pop, offspring=off, generations=gens, seed=11,
+                    time_budget_s=420 if decoder == "ilp" else 240,
+                )
+                t0 = time.monotonic()
+                res = explorer.explore(problem)
                 times[tag] = time.monotonic() - t0
                 fronts[tag] = res.front
         union = nondominated([p for f in fronts.values() for p in f])
@@ -175,24 +168,18 @@ def run_scaling(
         for tier_i, sc in enumerate(scenarios):
             tier = list(BUDGET_TIERS)[tier_i % len(BUDGET_TIERS)]
             gens, pop, off = BUDGET_TIERS[tier]
-            g, arch = sc.build()
-            engine = EvaluationEngine(GenotypeSpace(g, arch), n_workers=n_workers)
+            problem = ExplorationProblem.from_scenario(sc)
+            g, arch = problem.graph, problem.arch
+            explorer = NSGA2Explorer(
+                population=pop, offspring=off, generations=gens, seed=seed
+            )
+            engine = problem.make_engine(n_workers=n_workers)
             fronts, times = {}, {}
             with engine:
                 for strategy in ("Reference", "MRB_Explore"):
+                    problem.strategy = strategy
                     t0 = time.monotonic()
-                    res = run_dse(
-                        g,
-                        arch,
-                        DSEConfig(
-                            strategy=strategy,
-                            population=pop,
-                            offspring=off,
-                            generations=gens,
-                            seed=seed,
-                        ),
-                        engine=engine,
-                    )
+                    res = explorer.explore(problem, engine=engine)
                     times[strategy] = time.monotonic() - t0
                     fronts[strategy] = res.front
             union = nondominated([p for f in fronts.values() for p in f])

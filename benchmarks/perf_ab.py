@@ -94,7 +94,7 @@ def show(tag, r):
 def dse_cache_ab(repeats: int = 5):
     """A/B the memoized evaluation engine on the Sobel benchmark config
     (SCALE['Sobel']: 30 generations, population 24, offspring 10, seed 11,
-    all three strategies).  Arms:
+    all three strategies, via ExplorationProblem + NSGA2Explorer).  Arms:
 
       no_memo   no decode memoization, no ξ-transform cache
       seed      the pre-engine run_dse: exact-genotype memoization only
@@ -103,17 +103,12 @@ def dse_cache_ab(repeats: int = 5):
     Pareto fronts must be bit-identical across all arms — the engine
     changes wall time only.  Arms are interleaved and the per-arm minimum
     reported: shared-container wall-clock noise swamps sequential medians.
+    Writes BENCH_dse.json at the repo root so the perf trajectory is
+    machine-readable across PRs.
     """
     import time as _time
 
-    from repro.core import (
-        DSEConfig,
-        EvaluationEngine,
-        GenotypeSpace,
-        paper_architecture,
-        run_dse,
-        sobel,
-    )
+    from repro.core import ExplorationProblem, NSGA2Explorer, paper_architecture, sobel
 
     g, arch = sobel(), paper_architecture()
     arms = {
@@ -122,19 +117,21 @@ def dse_cache_ab(repeats: int = 5):
         "engine": dict(cache_mode="canonical", transform_cache=64),
     }
     strategies = ("Reference", "MRB_Always", "MRB_Explore")
+    # track_hypervolume=False: the timed arms measure decode/cache work,
+    # not hypervolume post-processing (matches the pre-redesign baseline).
+    explorer = NSGA2Explorer(population=24, offspring=10, generations=30,
+                             seed=11, track_hypervolume=False)
 
     def run_arm(arm):
         fronts, decodes, hits = [], 0, 0
         t0 = _time.monotonic()
         for strategy in strategies:
-            cfg = DSEConfig(
-                strategy=strategy, population=24, offspring=10, generations=30, seed=11
-            )
-            with EvaluationEngine(GenotypeSpace(g, arch), **arms[arm]) as eng:
-                res = run_dse(g, arch, cfg, engine=eng)
-            fronts.append(res.front)
-            decodes += res.evaluations
-            hits += res.cache_hits
+            problem = ExplorationProblem(graph=g, arch=arch, strategy=strategy)
+            with problem.make_engine(**arms[arm]) as eng:
+                run = explorer.explore(problem, engine=eng)
+            fronts.append(run.front)
+            decodes += run.evaluations
+            hits += run.cache_hits
         return _time.monotonic() - t0, fronts, decodes, hits
 
     run_arm("no_memo")  # warm-up
@@ -154,9 +151,8 @@ def dse_cache_ab(repeats: int = 5):
             f"decodes={decodes} hits={hits}",
             flush=True,
         )
-    assert last["no_memo"][0] == last["seed"][0] == last["engine"][0], (
-        "Pareto fronts diverged across engine arms"
-    )
+    fronts_identical = last["no_memo"][0] == last["seed"][0] == last["engine"][0]
+    assert fronts_identical, "Pareto fronts diverged across engine arms"
     for arm in ("seed", "engine"):
         print(
             f"speedup {arm} vs no_memo: "
@@ -168,6 +164,23 @@ def dse_cache_ab(repeats: int = 5):
         f"({results['seed']['decodes'] - results['engine']['decodes']} decodes saved)"
     )
     print("fronts bit-identical across all arms: OK")
+
+    bench = {
+        "experiment": "dse_cache",
+        "config": {"population": 24, "offspring": 10, "generations": 30,
+                   "seed": 11, "strategies": list(strategies)},
+        "arms": results,
+        "speedup_engine_vs_no_memo":
+            results["no_memo"]["wall_s"] / results["engine"]["wall_s"],
+        "speedup_engine_vs_seed":
+            results["seed"]["wall_s"] / results["engine"]["wall_s"],
+        "fronts_identical": fronts_identical,
+    }
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_dse.json")
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(bench_path)}")
     return results
 
 

@@ -14,9 +14,8 @@ import random
 import sys
 import time
 
-from repro.core import DSEConfig, run_dse
+from repro.core import ExplorationProblem, get_decoder, get_explorer
 from repro.core.binding import CHANNEL_DECISIONS
-from repro.core.caps_hms import decode_via_heuristic
 from repro.core.schedule import validate_schedule
 from repro.scenarios import FAMILIES, sample_scenarios, validate_scenario
 
@@ -45,7 +44,7 @@ def main(argv=None) -> int:
             for a in g.actors
         }
         cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
-        res = decode_via_heuristic(g, arch, cd, ba)
+        res = get_decoder("caps_hms")(g, arch, cd, ba)
         ok = res.feasible and validate_schedule(g, arch, res.schedule) == []
         if not ok:
             failures += 1
@@ -57,18 +56,17 @@ def main(argv=None) -> int:
             + ("" if ok else "  FAIL")
         )
 
-    g, arch = scenarios[0].build()
+    problem = ExplorationProblem.from_scenario(scenarios[0])
     t0 = time.monotonic()
-    res = run_dse(
-        g, arch,
-        DSEConfig(population=8, offspring=4, generations=2, seed=args.seed),
-    )
+    run = get_explorer(
+        "nsga2", population=8, offspring=4, generations=2, seed=args.seed
+    ).explore(problem)
     print(
-        f"micro-DSE on {scenarios[0].name}: front={len(res.front)} pts "
-        f"decodes={res.evaluations} hits={res.cache_hits} "
+        f"micro-DSE on {scenarios[0].name}: front={len(run.front)} pts "
+        f"decodes={run.evaluations} hits={run.cache_hits} "
         f"wall={time.monotonic() - t0:.1f}s"
     )
-    if not res.front:
+    if not run.front:
         failures += 1
     print("scenario_smoke:", "FAIL" if failures else "OK")
     return 1 if failures else 0

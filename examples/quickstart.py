@@ -1,9 +1,10 @@
 """Quickstart: the paper in one page.
 
-Builds the Sobel application (Table 1), explores mappings onto the 24-core
-heterogeneous target with NSGA-II, and prints the Pareto front — showing
-the period / memory-footprint / core-cost trade-off that selective MRB
-replacement (ξ) opens up.
+Builds the Sobel application (Table 1), declares an
+:class:`ExplorationProblem` (what to map, onto what, judged how), explores
+mappings onto the 24-core heterogeneous target with the NSGA-II explorer,
+and prints the Pareto front — showing the period / memory-footprint /
+core-cost trade-off that selective MRB replacement (ξ) opens up.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,10 +13,10 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import (
-    DSEConfig,
+    ExplorationProblem,
+    NSGA2Explorer,
     multicast_actors,
     paper_architecture,
-    run_dse,
     sobel,
     substitute_mrbs,
     table1_row,
@@ -32,18 +33,25 @@ def main():
     print(f"after MRB replacement: channel {mrb} "
           f"(γ={gt.channels[mrb].capacity}, readers={gt.consumers[mrb]})\n")
 
-    arch = paper_architecture()
-    print("exploring mappings (NSGA-II, reduced run)...")
-    res = run_dse(
-        g, arch,
-        DSEConfig(strategy="MRB_Explore", population=20, offspring=8,
-                  generations=12, seed=0, time_budget_s=90),
+    problem = ExplorationProblem(
+        graph=g,
+        arch=paper_architecture(),
+        objectives=("period", "memory", "core_cost"),  # paper triple
+        strategy="MRB_Explore",
+        decoder="caps_hms",
     )
-    print(f"\n{len(res.front)} non-dominated implementations "
-          f"({res.evaluations} decoded):")
+    print(f"exploring {problem.name} (NSGA-II, reduced run)...")
+    explorer = NSGA2Explorer(
+        population=20, offspring=8, generations=12, seed=0, time_budget_s=90
+    )
+    run = explorer.explore(problem)
+    print(f"\n{len(run.front)} non-dominated implementations "
+          f"({run.evaluations} decoded, "
+          f"final relHV trajectory {run.hv_history[0]:.2f} -> 1.00):")
     print(f"{'period':>8} {'memory MiB':>11} {'core cost':>10}  MRB?")
-    for ind in sorted(res.archive, key=lambda i: i.objectives):
-        if not ind.feasible or ind.objectives not in set(res.front):
+    front = set(run.front)
+    for ind in sorted(run.archive, key=lambda i: i.objectives):
+        if not ind.feasible or ind.objectives not in front:
             continue
         p, mf, k = ind.objectives
         print(f"{p:8.0f} {mf/2**20:11.2f} {k:10.1f}  ξ={ind.genotype.xi}")

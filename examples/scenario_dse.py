@@ -1,21 +1,23 @@
-"""Quickstart: generate a scenario family, run the memoized DSE on it.
+"""Quickstart: generate a scenario family, explore it through the
+problem/explorer API.
 
   PYTHONPATH=src python examples/scenario_dse.py [--family stencil_chain]
 
-Generates a seeded application/architecture pair, prints its Table-1-style
-stats, and runs a small Reference-vs-MRB_Explore comparison through one
-shared EvaluationEngine (the decode cache is reused across both runs).
+Generates a seeded application/architecture pair, wraps it in an
+:class:`ExplorationProblem`, and runs a small Reference-vs-MRB_Explore
+comparison through one shared EvaluationEngine (the decode cache is reused
+across both runs).  Then re-runs the winner with a fourth objective —
+``comm_volume`` (interconnect byte·hops) — and saves the resulting
+:class:`ExplorationRun` as JSON under runs/.
 """
 import argparse
 import time
 
 from repro.core import (
-    DSEConfig,
-    EvaluationEngine,
-    GenotypeSpace,
+    ExplorationProblem,
+    NSGA2Explorer,
     nondominated,
     relative_hypervolume,
-    run_dse,
     table1_row,
 )
 from repro.scenarios import FAMILIES, sample_scenarios
@@ -28,31 +30,41 @@ def main() -> None:
     args = ap.parse_args()
 
     sc = sample_scenarios(seed=args.seed, n=1, families=[args.family])[0]
-    g, arch = sc.build()
+    problem = ExplorationProblem.from_scenario(sc)
+    g, arch = problem.graph, problem.arch
     print(f"scenario {sc.name}: {table1_row(g)}")
     print(f"architecture: {len(arch.cores)} cores in {len(arch.tiles())} tiles")
-    print(f"spec (reproducible): {sc.dumps()}")
+    print(f"problem spec (reproducible): {problem.dumps()[:120]}...")
 
+    explorer = NSGA2Explorer(population=16, offspring=8, generations=8,
+                             seed=args.seed)
     fronts = {}
-    with EvaluationEngine(GenotypeSpace(g, arch)) as engine:
+    with problem.make_engine() as engine:
         for strategy in ("Reference", "MRB_Explore"):
+            problem.strategy = strategy
             t0 = time.monotonic()
-            res = run_dse(
-                g,
-                arch,
-                DSEConfig(strategy=strategy, population=16, offspring=8,
-                          generations=8, seed=args.seed),
-                engine=engine,
-            )
-            fronts[strategy] = res.front
+            run = explorer.explore(problem, engine=engine)
+            fronts[strategy] = run.front
             print(
-                f"{strategy:12s} front={len(res.front)} pts "
-                f"decodes={res.evaluations} cache_hits={res.cache_hits} "
+                f"{strategy:12s} front={len(run.front)} pts "
+                f"decodes={run.evaluations} cache_hits={run.cache_hits} "
                 f"wall={time.monotonic() - t0:.1f}s"
             )
     union = nondominated([p for f in fronts.values() for p in f])
     for strategy, front in fronts.items():
         print(f"{strategy:12s} relHV={relative_hypervolume(front, union):.3f}")
+
+    # Extensibility: add a 4th objective without touching the MOEA.
+    problem4 = ExplorationProblem.from_scenario(
+        sc, objectives=("period", "memory", "core_cost", "comm_volume"),
+        strategy="MRB_Explore",
+    )
+    run4 = explorer.explore(problem4)
+    path = run4.save()
+    print(
+        f"4-objective run: front={len(run4.front)} pts "
+        f"(k={len(problem4.objectives)}), saved -> {path}"
+    )
 
 
 if __name__ == "__main__":

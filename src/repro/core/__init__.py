@@ -1,5 +1,6 @@
 """Paper-faithful core: MRBs, channel placement, CAPS-HMS / exact modulo
-scheduling, and the hybrid NSGA-II design space exploration."""
+scheduling, and the hybrid design space exploration behind a pluggable
+problem / decoder / explorer API (see README "Exploration API")."""
 from .architecture import ArchitectureGraph, paper_architecture
 from .apps import APPLICATIONS, multicamera, sobel, sobel4, table1_row
 from .binding import (
@@ -12,6 +13,13 @@ from .binding import (
     validate_binding,
 )
 from .caps_hms import DecodeResult, caps_hms, decode_via_heuristic
+from .decoders import (
+    DECODERS,
+    Decoder,
+    decoder_names,
+    get_decoder,
+    register_decoder,
+)
 from .dse import (
     DSEConfig,
     DSEResult,
@@ -20,10 +28,33 @@ from .dse import (
     Individual,
     STRATEGIES,
     evaluate_genotype,
+    infeasible_objectives,
     pipeline_delays,
     run_dse,
+    xi_mode,
 )
 from .engine import CACHE_MODES, EvaluationEngine, decode_key
+from .explorers import (
+    EXPLORERS,
+    ExplorationRun,
+    Explorer,
+    NSGA2Explorer,
+    RandomSearchExplorer,
+    explorer_names,
+    get_explorer,
+    register_explorer,
+)
+from .problem import (
+    OBJECTIVES,
+    EvalContext,
+    ExplorationProblem,
+    Objective,
+    PAPER_OBJECTIVES,
+    get_objective,
+    objective_names,
+    register_objective,
+    resolve_objectives,
+)
 from .graph import (
     Actor,
     ApplicationGraph,

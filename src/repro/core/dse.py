@@ -1,14 +1,21 @@
 """Hybrid design space exploration (paper §IV, Fig. 6).
 
-A NSGA-II MOEA explores the genotype 𝒢 = (ξ, C_d, β_A):
+The MOEA explores the genotype 𝒢 = (ξ, C_d, β_A):
   ξ    binary string: per multi-cast actor, replace by MRB or keep
   C_d  integer string: per channel, placement decision ∈ CHANNEL_DECISIONS
   β_A  integer string: per actor, index into its allowed-core list
 
 Decoding (the paper's hybrid step): Algorithm 1 (substitute MRBs) produces
-the transformed graph g̃_A; the chosen scheduler (CAPS-HMS heuristic or the
-exact branch-and-bound "ILP") produces the phenotype (P, β, γ).  Objectives
-are (period P, memory footprint M_F, core cost K), all minimized.
+the transformed graph g̃_A; the chosen decoder (CAPS-HMS heuristic or the
+exact branch-and-bound "ILP", see :mod:`repro.core.decoders`) produces the
+phenotype (P, β, γ).  Objectives are pluggable (:mod:`repro.core.problem`);
+the paper's are (period P, memory footprint M_F, core cost K), minimized.
+
+This module keeps the genotype machinery (:class:`GenotypeSpace`,
+:func:`evaluate_genotype`) and the historical `run_dse`/`DSEConfig` entry
+point, now a thin wrapper over :class:`repro.core.explorers.NSGA2Explorer`
+driving an :class:`repro.core.problem.ExplorationProblem` — bit-identical
+to the pre-registry implementation under a fixed seed.
 
 Paper experiment settings: population 100, 25 offspring per generation,
 crossover rate 0.95, NSGA-II elitist selection.  Strategies:
@@ -19,17 +26,16 @@ crossover rate 0.95, NSGA-II elitist selection.  Strategies:
 from __future__ import annotations
 
 import random
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from .architecture import ArchitectureGraph
-from .binding import CHANNEL_DECISIONS, core_cost, memory_footprint
-from .caps_hms import decode_via_heuristic
+from .binding import CHANNEL_DECISIONS
+from .decoders import get_decoder
 from .graph import ApplicationGraph, multicast_actors
-from .ilp import decode_via_ilp
 from .mrb import substitute_mrbs
-from .pareto import crowding_distance, fast_nondominated_sort, nondominated
+from .pareto import nondominated
+from .problem import Objective, STRATEGIES, EvalContext, resolve_objectives
 from .schedule import Schedule
 
 __all__ = [
@@ -42,14 +48,20 @@ __all__ = [
     "pipeline_delays",
     "transformed_graph",
     "evaluate_genotype",
+    "infeasible_objectives",
     "run_dse",
     "STRATEGIES",
+    "xi_mode",
 ]
 
-Objectives = Tuple[float, float, float]  # (P, M_F, K)
+Objectives = Tuple[float, ...]  # ordered objective vector, all minimized
+
 _INFEASIBLE: Objectives = (float("inf"), float("inf"), float("inf"))
 
-STRATEGIES = ("Reference", "MRB_Always", "MRB_Explore")
+
+def infeasible_objectives(k: int = 3) -> Objectives:
+    """The all-∞ objective vector marking an infeasible decode."""
+    return tuple(float("inf") for _ in range(k))
 
 
 def pipeline_delays(g: ApplicationGraph, delay: int = 1) -> ApplicationGraph:
@@ -157,16 +169,22 @@ def evaluate_genotype(
     space: GenotypeSpace,
     genotype: Genotype,
     *,
-    decoder: str = "caps_hms",
+    decoder: Union[str, Callable] = "caps_hms",
     ilp_budget_s: float = 3.0,
     pipelined: bool = True,
     transformed: Optional[ApplicationGraph] = None,
+    objectives: Optional[Sequence[Union[str, Objective]]] = None,
 ) -> Individual:
-    """Decode 𝒢 → phenotype → objectives (Fig. 6's update step).
+    """Decode 𝒢 → phenotype → objective vector (Fig. 6's update step).
 
-    ``transformed`` short-circuits the ξ graph transform with a cached
+    ``decoder`` is a registry name (or callable) resolved through
+    :func:`repro.core.decoders.get_decoder`; ``objectives`` is an ordered
+    spec resolved through :func:`repro.core.problem.resolve_objectives`
+    (default: the paper's (P, M_F, K)).  ``transformed`` short-circuits the
+    ξ graph transform with a cached
     ``transformed_graph(space, genotype.xi, pipelined)`` result.
     """
+    objs = resolve_objectives(objectives)
     g, arch = space.g, space.arch
     gt = (
         transformed
@@ -192,22 +210,19 @@ def evaluate_genotype(
         if a in gt.actors
     }
 
-    if decoder == "ilp":
-        res = decode_via_ilp(gt, arch, decisions, beta_a, time_budget_s=ilp_budget_s)
-    else:
-        res = decode_via_heuristic(gt, arch, decisions, beta_a)
+    res = get_decoder(decoder)(
+        gt, arch, decisions, beta_a, time_budget_s=ilp_budget_s
+    )
     if not res.feasible or res.schedule is None:
-        return Individual(genotype, _INFEASIBLE, None)
-    sched = res.schedule
-    mf = memory_footprint(gt, sched.capacities)
-    k = core_cost(arch, sched.actor_binding)
-    return Individual(genotype, (float(sched.period), float(mf), float(k)), sched)
+        return Individual(genotype, infeasible_objectives(len(objs)), None)
+    ctx = EvalContext(gt, arch, res.schedule)
+    return Individual(genotype, tuple(o(ctx) for o in objs), res.schedule)
 
 
 @dataclass
 class DSEConfig:
     strategy: str = "MRB_Explore"          # Reference | MRB_Always | MRB_Explore
-    decoder: str = "caps_hms"              # caps_hms | ilp
+    decoder: str = "caps_hms"              # any repro.core.decoders registry name
     population: int = 100
     offspring: int = 25
     generations: int = 2500
@@ -239,8 +254,18 @@ class DSEResult:
         return nondominated([i.objectives for i in self.archive if i.feasible])
 
 
-def _xi_mode(strategy: str) -> str:
-    return {"Reference": "never", "MRB_Always": "always", "MRB_Explore": "explore"}[strategy]
+def xi_mode(strategy: str) -> str:
+    """Map a ξ-strategy name to the GenotypeSpace sampling mode."""
+    try:
+        return {"Reference": "never", "MRB_Always": "always", "MRB_Explore": "explore"}[strategy]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {strategy!r}; expected one of {STRATEGIES}"
+        ) from None
+
+
+# Backwards-compatible private alias (pre-registry name).
+_xi_mode = xi_mode
 
 
 def run_dse(
@@ -251,9 +276,11 @@ def run_dse(
     on_generation: Optional[Callable[[int, "DSEResult"], None]] = None,
     engine: Optional["EvaluationEngine"] = None,
 ) -> DSEResult:
-    """NSGA-II main loop (paper Fig. 6): creator → decode/evaluate →
-    selector (rank + crowding tournament) → recombinator (crossover +
-    mutation) → elitist μ+λ truncation.
+    """Paper-configured NSGA-II exploration (Fig. 6) — now a thin wrapper
+    that builds an :class:`~repro.core.problem.ExplorationProblem` with the
+    paper's three objectives and runs it through
+    :class:`~repro.core.explorers.NSGA2Explorer`.  Fronts are bit-identical
+    to the pre-registry implementation under a fixed seed.
 
     Decoding goes through an :class:`repro.core.engine.EvaluationEngine`
     (memoized, optionally process-parallel).  Pass ``engine`` to share its
@@ -262,118 +289,46 @@ def run_dse(
     engine configurations yield bit-identical fronts under a fixed seed:
     genotype creation never depends on decode timing or order.
     """
-    from .engine import EvaluationEngine  # deferred: engine imports this module
+    from .explorers import explorer_from_config  # deferred: explorers import this module
+    from .problem import ExplorationProblem
 
-    t0 = time.monotonic()
-    rng = random.Random(config.seed)
-    mode = _xi_mode(config.strategy)
-    result = DSEResult(config)
+    problem = ExplorationProblem(
+        graph=g,
+        arch=arch,
+        strategy=config.strategy,
+        decoder=config.decoder,
+        pipelined=config.pipelined,
+        ilp_budget_s=config.ilp_budget_s,
+    )
+    # DSEResult has no hypervolume trajectory, so don't pay for one.
+    explorer = explorer_from_config(config, track_hypervolume=False)
+
     own_engine = engine is None
     if engine is None:
-        engine = EvaluationEngine(
-            GenotypeSpace(g, arch),
-            decoder=config.decoder,
-            ilp_budget_s=config.ilp_budget_s,
-            pipelined=config.pipelined,
+        engine = problem.make_engine(
             cache_mode=config.cache_mode,
             max_entries=config.cache_max_entries,
             n_workers=config.n_workers,
         )
-    else:
-        if engine.space.g is not g and engine.space.g.signature() != g.signature():
-            raise ValueError(
-                "engine was built for a different application graph "
-                f"({engine.space.g.name!r} vs {g.name!r})"
-            )
-        if (
-            engine.space.arch is not arch
-            and engine.space.arch.signature() != arch.signature()
-        ):
-            raise ValueError(
-                "engine was built for a different architecture "
-                f"({engine.space.arch.name!r} vs {arch.name!r})"
-            )
-    space = engine.space
-    ev0, hit0, miss0 = engine.evaluations, engine.hits, engine.misses
+
+    result = DSEResult(config)
+
+    def sync(run) -> DSEResult:
+        result.archive = run.archive
+        result.history = run.history
+        result.evaluations = run.evaluations
+        result.cache_hits = run.cache_hits
+        result.cache_misses = run.cache_misses
+        result.wall_s = run.wall_s
+        return result
+
+    cb = None
+    if on_generation is not None:
+        cb = lambda gen, run: on_generation(gen, sync(run))
 
     try:
-        def fix(gt: Genotype) -> Genotype:
-            if mode == "never":
-                return space.force_xi(gt, 0)
-            if mode == "always":
-                return space.force_xi(gt, 1)
-            return gt
-
-        pop = engine.evaluate_batch(
-            [fix(space.random(rng, mode)) for _ in range(config.population)]
-        )
-
-        def update_archive() -> None:
-            pool = result.archive + [i for i in pop if i.feasible]
-            objs = [i.objectives for i in pool]
-            nd = set(nondominated(objs))
-            seen = set()
-            archive = []
-            for i in pool:
-                if i.objectives in nd and i.objectives not in seen:
-                    archive.append(i)
-                    seen.add(i.objectives)
-            result.archive = archive
-
-        def rank_crowd(population: List[Individual]):
-            objs = [i.objectives for i in population]
-            fronts = fast_nondominated_sort(objs)
-            rank = {}
-            crowd = {}
-            for fi, front in enumerate(fronts):
-                rank.update({i: fi for i in front})
-                crowd.update(crowding_distance(objs, front))
-            return rank, crowd
-
-        def tournament(rank, crowd) -> Individual:
-            i, j = rng.randrange(len(pop)), rng.randrange(len(pop))
-            if (rank[i], -crowd.get(i, 0.0)) <= (rank[j], -crowd.get(j, 0.0)):
-                return pop[i]
-            return pop[j]
-
-        update_archive()
-        result.history.append([i.objectives for i in result.archive])
-
-        for gen in range(config.generations):
-            if config.time_budget_s and time.monotonic() - t0 > config.time_budget_s:
-                break
-            rank, crowd = rank_crowd(pop)
-            # Create the whole brood first (RNG order identical to evaluating
-            # one-by-one — evaluation never draws from rng), then decode as one
-            # memoized, possibly parallel batch.
-            children: List[Genotype] = []
-            for _ in range(config.offspring):
-                p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
-                child = (
-                    space.crossover(rng, p1.genotype, p2.genotype)
-                    if rng.random() < config.crossover_rate
-                    else p1.genotype
-                )
-                children.append(fix(space.mutate(rng, child, xi_mode=mode)))
-            offspring = engine.evaluate_batch(children)
-            merged = pop + offspring
-            rank2, crowd2 = rank_crowd(merged)
-            # elitist μ+λ truncation by (rank, -crowding)
-            order = sorted(
-                range(len(merged)),
-                key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
-            )
-            pop = [merged[i] for i in order[: config.population]]
-            update_archive()
-            result.history.append([i.objectives for i in result.archive])
-            if on_generation:
-                on_generation(gen, result)
-
-        result.evaluations = engine.evaluations - ev0
-        result.cache_hits = engine.hits - hit0
-        result.cache_misses = engine.misses - miss0
+        run = explorer.explore(problem, engine=engine, on_generation=cb)
     finally:
         if own_engine:
             engine.close()
-    result.wall_s = time.monotonic() - t0
-    return result
+    return sync(run)

@@ -46,6 +46,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .decoders import get_decoder
 from .dse import (
     Genotype,
     GenotypeSpace,
@@ -53,6 +54,7 @@ from .dse import (
     evaluate_genotype,
     transformed_graph,
 )
+from .problem import resolve_objectives
 
 __all__ = ["EvaluationEngine", "decode_key", "CACHE_MODES"]
 
@@ -107,14 +109,14 @@ _WORKER_ARGS: Optional[Tuple] = None
 _WORKER_GT: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()  # per-process ξ cache
 
 
-def _init_worker(space, decoder, ilp_budget_s, pipelined) -> None:
+def _init_worker(space, decoder, ilp_budget_s, pipelined, objective_names) -> None:
     global _WORKER_ARGS
-    _WORKER_ARGS = (space, decoder, ilp_budget_s, pipelined)
+    _WORKER_ARGS = (space, decoder, ilp_budget_s, pipelined, objective_names)
     _WORKER_GT.clear()
 
 
 def _eval_worker(genotype: Genotype) -> Individual:
-    space, decoder, ilp_budget_s, pipelined = _WORKER_ARGS  # type: ignore[misc]
+    space, decoder, ilp_budget_s, pipelined, objective_names = _WORKER_ARGS  # type: ignore[misc]
     gt = _WORKER_GT.get(genotype.xi)
     if gt is None:
         gt = transformed_graph(space, genotype.xi, pipelined)
@@ -128,6 +130,7 @@ def _eval_worker(genotype: Genotype) -> Individual:
         ilp_budget_s=ilp_budget_s,
         pipelined=pipelined,
         transformed=gt,
+        objectives=objective_names,
     )
 
 
@@ -145,13 +148,19 @@ class EvaluationEngine:
         max_entries: Optional[int] = None,
         n_workers: int = 0,
         transform_cache: int = 64,
+        objectives=None,
     ) -> None:
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"cache_mode must be one of {CACHE_MODES}")
+        get_decoder(decoder)  # fail fast on unknown registry names
         self.space = space
         self.decoder = decoder
         self.ilp_budget_s = ilp_budget_s
         self.pipelined = pipelined
+        # Ordered objective set (repro.core.problem registry); cached
+        # Individuals carry objective vectors in exactly this layout.
+        self.objectives = resolve_objectives(objectives)
+        self.objective_names = tuple(o.name for o in self.objectives)
         self.cache_mode = cache_mode
         self.max_entries = max_entries
         self.n_workers = n_workers
@@ -184,7 +193,13 @@ class EvaluationEngine:
             self._pool = ProcessPoolExecutor(
                 max_workers=self.n_workers,
                 initializer=_init_worker,
-                initargs=(self.space, self.decoder, self.ilp_budget_s, self.pipelined),
+                initargs=(
+                    self.space,
+                    self.decoder,
+                    self.ilp_budget_s,
+                    self.pipelined,
+                    self.objective_names,
+                ),
             )
         return self._pool
 
@@ -218,6 +233,7 @@ class EvaluationEngine:
             ilp_budget_s=self.ilp_budget_s,
             pipelined=self.pipelined,
             transformed=self._transformed(genotype.xi),
+            objectives=self.objectives,
         )
 
     def _wrap(self, genotype: Genotype, cached: Individual) -> Individual:

@@ -158,10 +158,21 @@ def relative_hypervolume(
     The reference point is 1.1^d (standard Zitzler offset): points that sit
     exactly on the normalization boundary (the union front's worst value in
     some objective) still contribute volume — with small fronts, a strategy
-    whose best memory equals the union maximum would otherwise score 0."""
+    whose best memory equals the union maximum would otherwise score 0.
+
+    Degenerate reference fronts (a single point, or zero extent in every
+    objective) give normalization nothing to scale by — every point maps to
+    the origin and the ratio is 0/0-shaped.  We define the value instead:
+    1.0 if the candidate front reaches (weakly dominates) the collapsed
+    reference point, else 0.0."""
     if not reference_front:
         return 0.0
     d = len(reference_front[0])
+    lo = [min(p[k] for p in reference_front) for k in range(d)]
+    hi = [max(p[k] for p in reference_front) for k in range(d)]
+    if all(h == l for l, h in zip(lo, hi)):
+        collapsed = tuple(lo)
+        return 1.0 if any(weakly_dominates(p, collapsed) for p in front) else 0.0
     ref_pt = tuple(1.1 for _ in range(d))
     hv_ref = hypervolume(normalize(reference_front, reference_front), ref_pt)
     if hv_ref == 0:

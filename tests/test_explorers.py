@@ -1,0 +1,264 @@
+"""Exploration API: decoder/objective/explorer registries, the
+back-compat regression (run_dse through NSGA2Explorer must be bit-identical
+to the pre-redesign implementation), k-objective end-to-end exploration,
+and ExplorationRun JSON round-trips."""
+import math
+
+import pytest
+
+from repro.core import (
+    DSEConfig,
+    EvalContext,
+    ExplorationProblem,
+    ExplorationRun,
+    GenotypeSpace,
+    NSGA2Explorer,
+    OBJECTIVES,
+    RandomSearchExplorer,
+    decoder_names,
+    evaluate_genotype,
+    explorer_names,
+    get_decoder,
+    get_explorer,
+    get_objective,
+    infeasible_objectives,
+    objective_names,
+    paper_architecture,
+    register_objective,
+    resolve_objectives,
+    run_dse,
+    sobel,
+)
+from repro.scenarios import sample_scenarios
+
+
+# ------------------------------------------------------------- registries
+def test_registries_expose_builtins():
+    assert {"caps_hms", "ilp"} <= set(decoder_names())
+    assert {"period", "memory", "core_cost", "comm_volume"} <= set(objective_names())
+    assert {"nsga2", "random_search"} <= set(explorer_names())
+    with pytest.raises(KeyError, match="unknown decoder"):
+        get_decoder("simulated_annealing")
+    with pytest.raises(KeyError, match="unknown objective"):
+        get_objective("latency")
+    with pytest.raises(KeyError, match="unknown explorer"):
+        get_explorer("tabu")
+
+
+def test_problem_validates_names():
+    g, arch = sobel(), paper_architecture()
+    with pytest.raises(KeyError):
+        ExplorationProblem(graph=g, arch=arch, objectives=("period", "nope"))
+    with pytest.raises(KeyError):
+        ExplorationProblem(graph=g, arch=arch, decoder="nope")
+    with pytest.raises(ValueError):
+        ExplorationProblem(graph=g, arch=arch, strategy="nope")
+    with pytest.raises(ValueError):
+        ExplorationProblem(graph=g, arch=arch, objectives=())
+
+
+def test_register_objective_plugs_into_evaluation():
+    @register_objective("_test_n_channels", unit="channels")
+    def _n_channels(ctx: EvalContext) -> float:
+        return float(len(ctx.graph.channels))
+
+    try:
+        sp = GenotypeSpace(sobel(), paper_architecture())
+        import random
+
+        ind = evaluate_genotype(
+            sp, sp.random(random.Random(0)),
+            objectives=("period", "_test_n_channels"),
+        )
+        assert ind.feasible and len(ind.objectives) == 2
+        assert ind.objectives[1] >= 1.0
+    finally:
+        del OBJECTIVES["_test_n_channels"]
+
+
+def test_infeasible_objectives_k():
+    assert infeasible_objectives(5) == (math.inf,) * 5
+    assert len(resolve_objectives(None)) == 3
+
+
+# ------------------------------------------- back-compat golden regression
+# Fronts captured from the pre-redesign run_dse (commit 5b5ee18) on Sobel /
+# paper24 — all three strategies × both decoders under fixed seeds.  The
+# redesigned path (run_dse -> ExplorationProblem -> NSGA2Explorer ->
+# decoder registry) must reproduce every front bit-for-bit.
+CAPS_CFG = dict(population=12, offspring=6, generations=4, seed=7)
+ILP_CFG = dict(population=8, offspring=4, generations=2, seed=7, ilp_budget_s=2.0)
+GOLDEN_FRONTS = {
+    ("Reference", "caps_hms"): [
+        (19098.0, 101562600.0, 6.0), (21063.0, 93268200.0, 5.5),
+        (21385.0, 91194600.0, 5.5), (22005.0, 99489000.0, 5.0),
+        (26323.0, 93268200.0, 5.0), (26530.0, 91194600.0, 4.5),
+        (30886.0, 99445200.0, 4.0), (31727.0, 107783400.0, 3.5),
+        (33659.0, 91194600.0, 4.0), (35590.0, 91194600.0, 3.5),
+    ],
+    ("MRB_Always", "caps_hms"): [
+        (16337.0, 66267600.0, 4.5), (16829.0, 58017000.0, 4.5),
+        (18930.0, 58017000.0, 3.0), (34378.0, 58017000.0, 2.5),
+    ],
+    ("MRB_Explore", "caps_hms"): [
+        (15864.0, 58017000.0, 5.0), (17303.0, 58017000.0, 4.0),
+        (23097.0, 60090600.0, 3.5),
+    ],
+    ("Reference", "ilp"): [
+        (18761.0, 97371600.0, 7.5), (19098.0, 101562600.0, 6.0),
+        (21659.0, 91194600.0, 6.5), (21796.0, 91194600.0, 5.0),
+    ],
+    ("MRB_Always", "ilp"): [(14920.0, 58017000.0, 4.5)],
+    ("MRB_Explore", "ilp"): [
+        (15658.0, 58017000.0, 6.5), (15864.0, 58017000.0, 5.0),
+        (17796.0, 66311400.0, 4.5),
+    ],
+}
+
+
+@pytest.mark.parametrize("strategy", ("Reference", "MRB_Always", "MRB_Explore"))
+def test_run_dse_bit_identical_to_pre_redesign_caps(strategy):
+    g, arch = sobel(), paper_architecture()
+    res = run_dse(g, arch, DSEConfig(strategy=strategy, decoder="caps_hms", **CAPS_CFG))
+    assert res.front == GOLDEN_FRONTS[(strategy, "caps_hms")]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ("Reference", "MRB_Always", "MRB_Explore"))
+def test_run_dse_bit_identical_to_pre_redesign_ilp(strategy):
+    g, arch = sobel(), paper_architecture()
+    res = run_dse(g, arch, DSEConfig(strategy=strategy, decoder="ilp", **ILP_CFG))
+    assert res.front == GOLDEN_FRONTS[(strategy, "ilp")]
+
+
+def test_explorer_path_equals_run_dse_wrapper():
+    """Driving NSGA2Explorer directly over an ExplorationProblem gives the
+    same front and history as the run_dse convenience wrapper."""
+    g, arch = sobel(), paper_architecture()
+    cfg = DSEConfig(strategy="MRB_Explore", **CAPS_CFG)
+    res = run_dse(g, arch, cfg)
+    problem = ExplorationProblem(graph=g, arch=arch, strategy="MRB_Explore")
+    run = NSGA2Explorer(**CAPS_CFG).explore(problem)
+    assert run.front == res.front
+    assert run.history == res.history
+    assert len(run.hv_history) == len(run.history)
+    assert run.hv_history[-1] == pytest.approx(1.0)  # final front vs itself
+
+
+# ---------------------------------------------------- k-objective end-to-end
+@pytest.fixture(scope="module")
+def gen_problem4():
+    sc = sample_scenarios(seed=3, n=1, families=["stencil_chain"])[0]
+    return ExplorationProblem.from_scenario(
+        sc, objectives=("period", "memory", "core_cost", "comm_volume")
+    )
+
+
+def test_four_objective_exploration_end_to_end(gen_problem4):
+    """Acceptance demo: period × memory × core-cost × comm_volume through
+    ExplorationProblem on a generated scenario."""
+    run = NSGA2Explorer(population=12, offspring=6, generations=3, seed=2).explore(
+        gen_problem4
+    )
+    assert run.front, "4-objective run produced no feasible points"
+    assert all(len(p) == 4 for p in run.front)
+    assert all(p[3] >= 0 for p in run.front)  # comm_volume is byte·hops >= 0
+    # comm_volume varies across the front (it is a real trade-off axis)
+    assert run.evaluations > 0 and len(run.history) == 4
+    assert all(0.0 <= v <= 1.0 + 1e-9 for v in run.hv_history)
+
+
+def test_exploration_run_json_round_trip(gen_problem4, tmp_path):
+    run = NSGA2Explorer(population=10, offspring=5, generations=2, seed=4).explore(
+        gen_problem4
+    )
+    path = run.save(str(tmp_path / "run.json"))
+    loaded = ExplorationRun.load(path)
+    assert loaded.front == run.front
+    assert loaded.history == run.history
+    assert loaded.hv_history == run.hv_history
+    assert loaded.explorer == "nsga2" and loaded.params == run.params
+    assert loaded.problem.objectives == gen_problem4.objectives
+    assert loaded.problem.graph.signature() == gen_problem4.graph.signature()
+    assert loaded.problem.arch.signature() == gen_problem4.arch.signature()
+    # default (content-addressed) naming under out_dir: a repeated
+    # identical run (same seed, different wall time) lands on the same file
+    auto = run.save(out_dir=str(tmp_path))
+    assert ExplorationRun.load(auto).front == run.front
+    rerun = NSGA2Explorer(population=10, offspring=5, generations=2, seed=4).explore(
+        gen_problem4
+    )
+    assert rerun.save(out_dir=str(tmp_path)) == auto
+
+
+def test_problem_json_round_trip_without_scenario():
+    g, arch = sobel(), paper_architecture()
+    p = ExplorationProblem(graph=g, arch=arch, objectives=("period", "comm_volume"),
+                           strategy="MRB_Always", decoder="ilp", ilp_budget_s=1.5)
+    q = ExplorationProblem.from_json(p.dumps())
+    assert q.graph.signature() == g.signature()
+    assert q.arch.signature() == arch.signature()
+    assert (q.objectives, q.strategy, q.decoder, q.ilp_budget_s) == (
+        ("period", "comm_volume"), "MRB_Always", "ilp", 1.5)
+
+
+# ------------------------------------------------------------ random search
+def test_random_search_explorer_seeded_and_comparable():
+    g, arch = sobel(), paper_architecture()
+    problem = ExplorationProblem(graph=g, arch=arch)
+    a = RandomSearchExplorer(samples=40, batch=20, seed=9).explore(problem)
+    b = get_explorer("random_search", samples=40, batch=20, seed=9).explore(problem)
+    assert a.front == b.front and a.front
+    assert len(a.history) == 2  # two batches
+    assert all(len(p) == 3 for p in a.front)
+
+
+def test_callable_decoder_without_budget_kwarg_is_adapted():
+    """Raw decode functions (no time_budget_s parameter) work both passed
+    directly and through the registry."""
+    import random
+
+    from repro.core import decode_via_heuristic
+
+    sp = GenotypeSpace(sobel(), paper_architecture())
+    gt = sp.random(random.Random(0))
+    direct = evaluate_genotype(sp, gt, decoder=decode_via_heuristic)
+    named = evaluate_genotype(sp, gt, decoder="caps_hms")
+    assert direct.objectives == named.objectives
+
+
+def test_shared_engine_rejects_objective_mismatch(gen_problem4):
+    base = ExplorationProblem(
+        graph=gen_problem4.graph, arch=gen_problem4.arch
+    )  # default paper triple
+    with base.make_engine() as engine:
+        with pytest.raises(ValueError, match="different objectives"):
+            NSGA2Explorer(population=4, offspring=2, generations=1).explore(
+                gen_problem4, engine=engine
+            )
+
+
+def test_run_provenance_survives_problem_mutation():
+    """Drivers reuse one problem and flip .strategy between explores; each
+    run must keep the strategy it actually ran."""
+    g, arch = sobel(), paper_architecture()
+    problem = ExplorationProblem(graph=g, arch=arch, strategy="Reference")
+    explorer = NSGA2Explorer(population=6, offspring=3, generations=1, seed=0)
+    with problem.make_engine() as engine:
+        ref_run = explorer.explore(problem, engine=engine)
+        problem.strategy = "MRB_Explore"
+        exp_run = explorer.explore(problem, engine=engine)
+    assert ref_run.problem.strategy == "Reference"
+    assert exp_run.problem.strategy == "MRB_Explore"
+
+
+def test_shared_engine_rejects_foreign_problem():
+    g, arch = sobel(), paper_architecture()
+    problem = ExplorationProblem(graph=g, arch=arch)
+    sc = sample_scenarios(seed=1, n=1, families=["stencil_chain"])[0]
+    other = ExplorationProblem.from_scenario(sc)
+    with other.make_engine() as engine:
+        with pytest.raises(ValueError, match="different application graph"):
+            NSGA2Explorer(population=4, offspring=2, generations=1).explore(
+                problem, engine=engine
+            )

@@ -1,0 +1,141 @@
+"""k-objective Pareto utilities: non-dominated sorting, crowding distance,
+and hypervolume on 2-, 4-, and 5-objective fronts, including duplicate
+points, empty fronts, and the degenerate-normalization guard of
+relative_hypervolume."""
+import math
+
+import pytest
+
+from repro.core import (
+    crowding_distance,
+    fast_nondominated_sort,
+    hypervolume,
+    nondominated,
+    relative_hypervolume,
+)
+
+
+# ------------------------------------------------------- nondominated sort
+def test_fast_nondominated_sort_2d_layered():
+    pts = [(1.0, 1.0), (2.0, 2.0), (1.0, 2.0), (0.5, 3.0), (3.0, 3.0)]
+    fronts = fast_nondominated_sort(pts)
+    assert fronts[0] == [0, 3]  # (1,1) and (0.5,3) are incomparable
+    assert fronts[1] == [2]     # (1,2) dominated by (1,1) only
+    assert fronts[2] == [1]     # (2,2) also dominated by (1,2)
+    assert fronts[3] == [4]
+    assert sorted(i for f in fronts for i in f) == list(range(len(pts)))
+
+
+def test_fast_nondominated_sort_4d_and_duplicates():
+    a = (1.0, 2.0, 3.0, 4.0)
+    b = (2.0, 3.0, 4.0, 5.0)   # dominated by a
+    c = (4.0, 3.0, 2.0, 1.0)   # incomparable with a
+    pts = [a, b, c, a]         # duplicate of a
+    fronts = fast_nondominated_sort(pts)
+    # duplicates weakly- but never strictly-dominate each other: same front
+    assert set(fronts[0]) == {0, 2, 3}
+    assert fronts[1] == [1]
+
+
+def test_fast_nondominated_sort_5d_all_incomparable():
+    # cyclic shifts: each point is best in one objective, worst in another
+    base = [1.0, 2.0, 3.0, 4.0, 5.0]
+    pts = [tuple(base[i:] + base[:i]) for i in range(5)]
+    fronts = fast_nondominated_sort(pts)
+    assert len(fronts) == 1 and set(fronts[0]) == set(range(5))
+
+
+def test_fast_nondominated_sort_empty():
+    assert fast_nondominated_sort([]) == []
+
+
+# --------------------------------------------------------- crowding distance
+def test_crowding_distance_2d_boundaries_infinite():
+    pts = [(0.0, 4.0), (1.0, 2.0), (2.0, 1.0), (4.0, 0.0)]
+    d = crowding_distance(pts, [0, 1, 2, 3])
+    assert d[0] == math.inf and d[3] == math.inf
+    assert 0.0 < d[1] < math.inf and 0.0 < d[2] < math.inf
+    # the middle point closer to its neighbours is less crowded-distant
+    assert d[2] <= d[1] + 1e-12
+
+
+def test_crowding_distance_4d_duplicates_and_empty():
+    assert crowding_distance([(1.0, 1.0)], []) == {}
+    pts = [(1.0, 2.0, 3.0, 4.0)] * 3  # all duplicates: every span is zero
+    d = crowding_distance(pts, [0, 1, 2])
+    # boundary points get inf per objective; interior duplicates accumulate 0
+    assert math.isinf(max(d.values()))
+    assert min(d.values()) >= 0.0
+
+
+def test_crowding_distance_5d_front_subset():
+    pts = [(float(i), float(5 - i), 1.0, 2.0, 3.0) for i in range(5)]
+    d = crowding_distance(pts, [0, 2, 4])
+    assert set(d) == {0, 2, 4}
+    assert math.isinf(d[0]) and math.isinf(d[4])
+
+
+# ---------------------------------------------------------------- hypervolume
+def test_hypervolume_2d_known_values():
+    assert hypervolume([(0.0, 0.0)], (1.0, 1.0)) == pytest.approx(1.0)
+    assert hypervolume([(0.5, 0.5)], (1.0, 1.0)) == pytest.approx(0.25)
+    staircase = [(0.2, 0.8), (0.5, 0.5), (0.8, 0.2)]
+    # 0.8*0.2 + 0.5*0.3 + 0.2*0.3 slabs
+    assert hypervolume(staircase, (1.0, 1.0)) == pytest.approx(0.37)
+
+
+def test_hypervolume_4d_and_5d_boxes():
+    assert hypervolume([(0.5,) * 4]) == pytest.approx(0.5**4)
+    assert hypervolume([(0.5,) * 5]) == pytest.approx(0.5**5)
+    # a second, dominated point adds nothing
+    assert hypervolume([(0.5,) * 4, (0.75,) * 4]) == pytest.approx(0.5**4)
+    # two incomparable 4-d boxes: inclusion-exclusion
+    pts = [(0.2, 0.6, 0.5, 0.5), (0.6, 0.2, 0.5, 0.5)]
+    expect = 0.8 * 0.4 * 0.25 + 0.4 * 0.8 * 0.25 - 0.4 * 0.4 * 0.25
+    assert hypervolume(pts) == pytest.approx(expect)
+
+
+def test_hypervolume_duplicates_and_empty():
+    assert hypervolume([]) == 0.0
+    assert hypervolume([(0.5, 0.5), (0.5, 0.5)], (1.0, 1.0)) == pytest.approx(0.25)
+    # points outside the reference box contribute nothing
+    assert hypervolume([(1.5, 1.5)], (1.0, 1.0)) == 0.0
+
+
+def test_nondominated_collapses_duplicates_any_dim():
+    pts = [(1.0, 2.0, 3.0, 4.0, 5.0)] * 4
+    assert nondominated(pts) == [(1.0, 2.0, 3.0, 4.0, 5.0)]
+    assert nondominated([]) == []
+
+
+# ------------------------------------------------ relative HV degenerate guard
+def test_relative_hypervolume_regular_case():
+    ref = [(0.0, 10.0), (10.0, 0.0)]
+    assert relative_hypervolume(ref, ref) == pytest.approx(1.0)
+    worse = [(10.0, 10.0)]
+    v = relative_hypervolume(worse, ref)
+    assert 0.0 <= v < 1.0
+
+
+def test_relative_hypervolume_single_point_reference():
+    """A single-point reference front has zero extent: the value is defined
+    as reached/not-reached instead of dividing by zero."""
+    ref = [(3.0, 4.0, 5.0)]
+    assert relative_hypervolume([(3.0, 4.0, 5.0)], ref) == 1.0
+    assert relative_hypervolume([(2.0, 4.0, 5.0)], ref) == 1.0  # dominates it
+    assert relative_hypervolume([(3.1, 4.0, 5.0)], ref) == 0.0  # misses it
+    assert relative_hypervolume([], ref) == 0.0
+    assert relative_hypervolume([(3.0, 4.0, 5.0)], []) == 0.0
+
+
+def test_relative_hypervolume_zero_extent_multipoint_reference():
+    ref = [(1.0, 2.0), (1.0, 2.0), (1.0, 2.0)]
+    assert relative_hypervolume([(1.0, 2.0)], ref) == 1.0
+    assert relative_hypervolume([(5.0, 5.0)], ref) == 0.0
+
+
+def test_relative_hypervolume_partial_degeneracy_is_finite():
+    """Zero extent in only *some* objectives must still be well-defined."""
+    ref = [(1.0, 0.0), (1.0, 10.0)]  # first objective has zero span
+    v = relative_hypervolume([(1.0, 5.0)], ref)
+    assert 0.0 <= v <= 1.0 and not math.isnan(v)
