@@ -129,27 +129,40 @@ def run(report, out_dir="runs/dse"):
 # E5: scaling sweep over generated scenario families (beyond paper)
 # --------------------------------------------------------------------------
 # (generations, population, offspring) MOEA budgets; scenarios cycle
-# through them, so per_family >= 2 exercises both.  Graph sizes vary via
-# the scenario sampler itself (strategies.PARAM_RANGES), not via the tier.
+# through them, so per_family >= 3 exercises all of them.  Graph sizes vary
+# via the scenario sampler's tier (strategies.SIZE_TIERS: --size standard
+# draws small graphs, --size large draws Multicamera-scale ones).
 BUDGET_TIERS = {
     "standard": (8, 12, 6),
     "light": (6, 10, 5),
+    "heavy": (12, 16, 8),
 }
+
+# Graphs at least this large are "Multicamera-sized": decode dominates the
+# sweep wall time, so the engine defaults to process-parallel evaluation.
+PARALLEL_DECODE_ACTORS = 12
+DEFAULT_PARALLEL_WORKERS = 2
 
 
 def run_scaling(
     report=None,
     *,
     families=None,
-    per_family: int = 2,
+    per_family: int = 3,
     seed: int = 0,
     n_workers: int = 0,
+    size: str = "standard",
     out_dir: str = "runs/dse",
 ):
     """Reference vs MRB_Explore on generated scenarios, per family.
 
     Each scenario shares one :class:`EvaluationEngine` across both strategy
     runs, so the forced-ξ fibers are decoded once for the whole pair.
+    ``size`` selects the scenario tier (``large`` draws Multicamera-scale
+    graphs); on Multicamera-sized graphs (≥ ``PARALLEL_DECODE_ACTORS``
+    actors) the engine defaults to ``DEFAULT_PARALLEL_WORKERS`` decode
+    workers when ``n_workers`` is left at 0 — pass ``n_workers < 0`` to
+    force serial decoding everywhere.
     Writes ``runs/dse/scaling_results.json``; rows go to ``report`` when
     given (benchmarks.run harness) or stdout otherwise.
     """
@@ -164,16 +177,19 @@ def run_scaling(
     fams = list(families or sorted(FAMILIES))
     results = {}
     for fam in fams:
-        scenarios = sample_scenarios(seed=seed, n=per_family, families=[fam])
+        scenarios = sample_scenarios(seed=seed, n=per_family, families=[fam], size=size)
         for tier_i, sc in enumerate(scenarios):
             tier = list(BUDGET_TIERS)[tier_i % len(BUDGET_TIERS)]
             gens, pop, off = BUDGET_TIERS[tier]
             problem = ExplorationProblem.from_scenario(sc)
             g, arch = problem.graph, problem.arch
+            workers = max(n_workers, 0)
+            if n_workers == 0 and len(g.actors) >= PARALLEL_DECODE_ACTORS:
+                workers = DEFAULT_PARALLEL_WORKERS
             explorer = NSGA2Explorer(
                 population=pop, offspring=off, generations=gens, seed=seed
             )
-            engine = problem.make_engine(n_workers=n_workers)
+            engine = problem.make_engine(n_workers=workers)
             fronts, times = {}, {}
             with engine:
                 for strategy in ("Reference", "MRB_Explore"):
@@ -188,6 +204,8 @@ def run_scaling(
             results[key] = {
                 "scenario": sc.to_json(),
                 "tier": tier,
+                "size_tier": size,
+                "n_workers": workers,
                 "size": {"A": len(g.actors), "C": len(g.channels)},
                 "hv": hv,
                 # Strategies share one engine: Reference runs cold,
@@ -224,11 +242,18 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scaling", action="store_true", help="run the E5 sweep")
-    ap.add_argument("--per-family", type=int, default=2)
+    ap.add_argument("--per-family", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--n-workers", type=int, default=0)
+    ap.add_argument(
+        "--n-workers", type=int, default=0,
+        help="0: auto (parallel on Multicamera-sized graphs); <0: force serial",
+    )
+    ap.add_argument("--size", choices=("standard", "large"), default="standard")
     args = ap.parse_args()
     if args.scaling:
-        run_scaling(per_family=args.per_family, seed=args.seed, n_workers=args.n_workers)
+        run_scaling(
+            per_family=args.per_family, seed=args.seed,
+            n_workers=args.n_workers, size=args.size,
+        )
     else:
         ap.error("pass --scaling (the paper matrix runs via benchmarks.run)")

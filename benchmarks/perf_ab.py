@@ -6,6 +6,7 @@ Run (one experiment, ~2-10 min each):
   PYTHONPATH=src python -m benchmarks.perf_ab --exp microbatch
   PYTHONPATH=src python -m benchmarks.perf_ab --exp decode_capacity
   PYTHONPATH=src python -m benchmarks.perf_ab --exp dse_cache
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp sim_backends
 """
 import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -184,15 +185,106 @@ def dse_cache_ab(repeats: int = 5):
     return results
 
 
+def sim_backends_ab(batch: int = 64, repeats: int = 3):
+    """A/B the self-timed simulator backends on one NSGA-II-population-sized
+    batch: ``batch`` feasible Sobel phenotypes (MRB_Always ξ, random
+    bindings, CAPS-HMS decode — one shared transformed graph, as
+    ``EvaluationEngine.evaluate_batch`` would hand the vectorized backend).
+
+      events       per-phenotype event-driven simulate_period loop
+      vec_cold     batch_simulate_periods incl. JIT compilation
+      vec_warm     batch_simulate_periods with compiled functions cached
+
+    Periods must be identical element-for-element across backends (the
+    repo-wide parity invariant).  Events/warm arms are interleaved and the
+    per-arm minimum reported; writes BENCH_sim.json at the repo root.
+    """
+    import random
+    import time as _time
+
+    from repro.core import paper_architecture, sobel
+    from repro.core.binding import CHANNEL_DECISIONS
+    from repro.core.caps_hms import decode_via_heuristic
+    from repro.core.dse import pipeline_delays
+    from repro.core.graph import multicast_actors
+    from repro.core.mrb import substitute_mrbs
+    from repro.sim import SimConfig, batch_simulate_periods, simulate_period
+    from repro.sim import vectorized as _vec
+
+    g, arch = sobel(), paper_architecture()
+    gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
+    rng = random.Random(2024)
+    cores = sorted(arch.cores)
+    scheds = []
+    while len(scheds) < batch:
+        ba = {
+            a: rng.choice(
+                [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in gt.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
+        res = decode_via_heuristic(gt, arch, cd, ba)
+        if res.feasible:
+            scheds.append(res.schedule)
+
+    cfg = SimConfig(trace=False)
+    _vec._COMPILED.clear()
+    t0 = _time.monotonic()
+    vec_first = batch_simulate_periods(gt, arch, scheds, cfg)
+    vec_cold = _time.monotonic() - t0
+
+    ev_walls, warm_walls = [], []
+    ev_periods = vec_periods = None
+    for _ in range(repeats):
+        t0 = _time.monotonic()
+        ev_periods = [simulate_period(gt, arch, s, cfg) for s in scheds]
+        ev_walls.append(_time.monotonic() - t0)
+        t0 = _time.monotonic()
+        vec_periods = batch_simulate_periods(gt, arch, scheds, cfg)
+        warm_walls.append(_time.monotonic() - t0)
+
+    assert ev_periods == vec_periods == vec_first, "simulator backends diverged"
+    results = {
+        "events": min(ev_walls),
+        "vec_cold": vec_cold,
+        "vec_warm": min(warm_walls),
+    }
+    for arm, wall in results.items():
+        print(f"arm={arm:9s} wall={wall:.3f}s", flush=True)
+    print(f"speedup vec_warm vs events: {results['events'] / results['vec_warm']:.2f}x")
+    print(f"periods identical across backends: OK ({batch} phenotypes)")
+
+    bench = {
+        "experiment": "sim_backends",
+        "config": {"app": "Sobel", "xi": "MRB_Always", "batch": batch,
+                   "repeats": repeats, "iterations": cfg.iterations,
+                   "max_iterations": cfg.max_iterations},
+        "arms": results,
+        "speedup_vec_warm_vs_events": results["events"] / results["vec_warm"],
+        "periods_identical": True,
+    }
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(bench_path)}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True,
-                    choices=["ce_mode", "microbatch", "decode_capacity", "dse_cache"])
+                    choices=["ce_mode", "microbatch", "decode_capacity",
+                             "dse_cache", "sim_backends"])
     ap.add_argument("--arch", default="gemma2-9b")
     args = ap.parse_args()
 
     if args.exp == "dse_cache":
         dse_cache_ab()
+        return
+    if args.exp == "sim_backends":
+        sim_backends_ab()
         return
 
     if args.exp == "ce_mode":

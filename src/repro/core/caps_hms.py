@@ -18,6 +18,7 @@ the paper's loop would accept, in O(#busy intervals) instead of O(P).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -41,15 +42,22 @@ __all__ = ["caps_hms", "decode_via_heuristic", "DecodeResult"]
 
 @dataclass
 class DecodeResult:
-    """Phenotype (P, β, γ) plus the full task timing for inspection."""
+    """Phenotype (P, β, γ) plus the full task timing for inspection.
+
+    ``period`` is ``math.inf`` for infeasible decodes so that ad-hoc
+    consumers comparing periods never rank an infeasible phenotype as
+    "better" (the historical ``-1`` sentinel silently did exactly that);
+    this matches the all-∞ objective vector at the ``EvalContext``
+    boundary (``infeasible_objectives``).
+    """
 
     schedule: Optional[Schedule]
     feasible: bool
     periods_tried: int = 0
 
     @property
-    def period(self) -> int:
-        return self.schedule.period if self.schedule else -1
+    def period(self) -> float:
+        return self.schedule.period if self.schedule else math.inf
 
 
 def _advance_past(period: int, s_abs: int, offset: int, busy_end: int) -> int:

@@ -43,6 +43,10 @@ class Decoder(Protocol):
 
     Returns any object with ``feasible: bool`` and ``schedule:
     Optional[Schedule]`` attributes (e.g. ``DecodeResult``/``ExactResult``).
+    If the result exposes a ``period``, it must be ``math.inf`` — never a
+    negative sentinel — when the decode is infeasible, so period
+    comparisons in ad-hoc consumers order infeasible phenotypes last
+    (matching ``infeasible_objectives`` at the ``EvalContext`` boundary).
     ``time_budget_s`` is advisory: anytime decoders honour it, exhaustive
     heuristics may ignore it.
     """

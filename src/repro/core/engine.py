@@ -54,11 +54,33 @@ from .dse import (
     evaluate_genotype,
     transformed_graph,
 )
-from .problem import resolve_objectives
+from .problem import Objective, resolve_objectives
 
-__all__ = ["EvaluationEngine", "decode_key", "CACHE_MODES"]
+__all__ = ["EvaluationEngine", "decode_key", "CACHE_MODES", "SIM_BACKENDS"]
 
 CACHE_MODES = ("canonical", "exact", "none")
+
+# How the ``sim_period`` objective is computed during evaluation:
+#   None / "events"  inline per decode (event-driven reference simulator);
+#   "vectorized"     deferred — decodes carry the analytic period as a
+#                    placeholder, then the whole batch is trace-simulated
+#                    per ξ-group in one JAX vmap call and patched.  Both
+#                    routes yield identical values (enforced backend parity).
+SIM_BACKENDS = (None, "events", "vectorized")
+
+
+def _analytic_period_placeholder(ctx) -> float:
+    return float(ctx.schedule.period)
+
+
+# Stands in for the registered ``sim_period`` objective while its real value
+# is computed by the batched simulator (module-level so workers pickle it).
+_SIM_PERIOD_DEFERRED = Objective(
+    "sim_period",
+    _analytic_period_placeholder,
+    "time units",
+    "deferred to the vectorized simulator (engine sim_backend)",
+)
 
 _DEAD = -1  # sentinel for alleles the decoder never reads
 
@@ -109,14 +131,20 @@ _WORKER_ARGS: Optional[Tuple] = None
 _WORKER_GT: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()  # per-process ξ cache
 
 
-def _init_worker(space, decoder, ilp_budget_s, pipelined, objective_names) -> None:
+def _init_worker(
+    space, decoder, ilp_budget_s, pipelined, objective_names, defer_sim=False
+) -> None:
     global _WORKER_ARGS
-    _WORKER_ARGS = (space, decoder, ilp_budget_s, pipelined, objective_names)
+    objectives = tuple(
+        _SIM_PERIOD_DEFERRED if (defer_sim and name == "sim_period") else name
+        for name in objective_names
+    )
+    _WORKER_ARGS = (space, decoder, ilp_budget_s, pipelined, objectives)
     _WORKER_GT.clear()
 
 
 def _eval_worker(genotype: Genotype) -> Individual:
-    space, decoder, ilp_budget_s, pipelined, objective_names = _WORKER_ARGS  # type: ignore[misc]
+    space, decoder, ilp_budget_s, pipelined, objectives = _WORKER_ARGS  # type: ignore[misc]
     gt = _WORKER_GT.get(genotype.xi)
     if gt is None:
         gt = transformed_graph(space, genotype.xi, pipelined)
@@ -130,7 +158,7 @@ def _eval_worker(genotype: Genotype) -> Individual:
         ilp_budget_s=ilp_budget_s,
         pipelined=pipelined,
         transformed=gt,
-        objectives=objective_names,
+        objectives=objectives,
     )
 
 
@@ -149,9 +177,13 @@ class EvaluationEngine:
         n_workers: int = 0,
         transform_cache: int = 64,
         objectives=None,
+        sim_backend: Optional[str] = None,
+        sim_config=None,
     ) -> None:
         if cache_mode not in CACHE_MODES:
             raise ValueError(f"cache_mode must be one of {CACHE_MODES}")
+        if sim_backend not in SIM_BACKENDS:
+            raise ValueError(f"sim_backend must be one of {SIM_BACKENDS}")
         get_decoder(decoder)  # fail fast on unknown registry names
         self.space = space
         self.decoder = decoder
@@ -161,6 +193,21 @@ class EvaluationEngine:
         # Individuals carry objective vectors in exactly this layout.
         self.objectives = resolve_objectives(objectives)
         self.objective_names = tuple(o.name for o in self.objectives)
+        self.sim_backend = sim_backend
+        self.sim_config = sim_config
+        # Deferred sim: decode with an analytic placeholder, then patch
+        # sim_period afterwards — per ξ group through the vectorized
+        # backend, or per phenotype through the event-driven one.  A
+        # non-default sim_config always defers, so the engine's config is
+        # honoured on every route (the inline objective can only use the
+        # default config).
+        self._sim_defer = "sim_period" in self.objective_names and (
+            sim_backend == "vectorized" or sim_config is not None
+        )
+        self._decode_objs = tuple(
+            _SIM_PERIOD_DEFERRED if (self._sim_defer and o.name == "sim_period") else o
+            for o in self.objectives
+        )
         self.cache_mode = cache_mode
         self.max_entries = max_entries
         self.n_workers = n_workers
@@ -199,6 +246,7 @@ class EvaluationEngine:
                     self.ilp_budget_s,
                     self.pipelined,
                     self.objective_names,
+                    self._sim_defer,
                 ),
             )
         return self._pool
@@ -233,8 +281,46 @@ class EvaluationEngine:
             ilp_budget_s=self.ilp_budget_s,
             pipelined=self.pipelined,
             transformed=self._transformed(genotype.xi),
-            objectives=self.objectives,
+            objectives=self._decode_objs,
         )
+
+    def _patch_sim(self, inds: List[Individual]) -> List[Individual]:
+        """Replace the deferred ``sim_period`` placeholders with measured
+        periods — one batched vectorized call per ξ pattern (phenotypes in
+        a ξ fiber share their transformed graph), or per-phenotype through
+        the event-driven backend when it was chosen only to honour a
+        non-default ``sim_config``.  Backend parity keeps the two routes
+        value-identical."""
+        from ..sim import batch_simulate_periods, simulate_period, simulation_enabled
+
+        if not self._sim_defer or not simulation_enabled():
+            return inds
+        sim_pos = [
+            i for i, n in enumerate(self.objective_names) if n == "sim_period"
+        ]
+        groups: Dict[Tuple[int, ...], List[int]] = {}
+        for i, ind in enumerate(inds):
+            if ind.feasible and ind.schedule is not None:
+                groups.setdefault(ind.genotype.xi, []).append(i)
+        out = list(inds)
+        for xi, idxs in groups.items():
+            gt = self._transformed(xi)
+            if self.sim_backend == "vectorized":
+                periods = batch_simulate_periods(
+                    gt, self.space.arch, [inds[i].schedule for i in idxs],
+                    self.sim_config,
+                )
+            else:
+                periods = [
+                    simulate_period(gt, self.space.arch, inds[i].schedule, self.sim_config)
+                    for i in idxs
+                ]
+            for i, p in zip(idxs, periods):
+                vec = list(out[i].objectives)
+                for j in sim_pos:
+                    vec[j] = float(p)
+                out[i] = Individual(out[i].genotype, tuple(vec), out[i].schedule)
+        return out
 
     def _wrap(self, genotype: Genotype, cached: Individual) -> Individual:
         # A canonical hit may come from a sibling genotype in the same
@@ -251,13 +337,13 @@ class EvaluationEngine:
     def evaluate(self, genotype: Genotype) -> Individual:
         key = self._key(genotype)
         if key is None:
-            return self._decode(genotype)
+            return self._patch_sim([self._decode(genotype)])[0]
         cached = self._cache.get(key)
         if cached is not None:
             self.hits += 1
             return self._wrap(genotype, cached)
         self.misses += 1
-        ind = self._decode(genotype)
+        ind = self._patch_sim([self._decode(genotype)])[0]
         self._store(key, ind)
         return ind
 
@@ -266,16 +352,25 @@ class EvaluationEngine:
 
         With ``n_workers > 0`` the unique cache misses are decoded in a
         process pool; the merge is order-deterministic, so results are
-        independent of worker scheduling.
+        independent of worker scheduling.  With ``sim_backend="vectorized"``
+        the misses' ``sim_period`` values are measured by one batched
+        trace-simulation per ξ group after decoding (identical values to
+        the inline event-driven route — enforced backend parity).
         """
-        if self.n_workers <= 0:
+        if self.n_workers <= 0 and not self._sim_defer:
             return [self.evaluate(gt) for gt in genotypes]
 
+        def decode_many(gts: Sequence[Genotype]) -> List[Individual]:
+            if self.n_workers > 0:
+                pool = self._ensure_pool()
+                decoded = list(pool.map(_eval_worker, gts))
+                self.evaluations += len(gts)
+            else:
+                decoded = [self._decode(gt) for gt in gts]
+            return self._patch_sim(decoded)
+
         if self.cache_mode == "none":
-            pool = self._ensure_pool()
-            out = list(pool.map(_eval_worker, genotypes))
-            self.evaluations += len(genotypes)
-            return out
+            return decode_many(genotypes)
 
         keys = [self._key(gt) for gt in genotypes]
         miss_order: List[str] = []
@@ -286,9 +381,7 @@ class EvaluationEngine:
             miss_order.append(key)
             miss_geno[key] = gt
         if miss_order:
-            pool = self._ensure_pool()
-            decoded = list(pool.map(_eval_worker, [miss_geno[k] for k in miss_order]))
-            self.evaluations += len(miss_order)
+            decoded = decode_many([miss_geno[k] for k in miss_order])
             for key, ind in zip(miss_order, decoded):
                 self._store(key, ind)
         out: List[Individual] = []
@@ -298,7 +391,7 @@ class EvaluationEngine:
             if cached is None:
                 # Evicted within this batch (tiny max_entries): decode inline.
                 fallback += 1
-                cached = self._decode(gt)
+                cached = self._patch_sim([self._decode(gt)])[0]
                 self._store(key, cached)
             out.append(self._wrap(gt, cached))
         # Hit/miss accounting mirrors the serial path; eviction-fallback

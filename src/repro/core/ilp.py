@@ -27,6 +27,7 @@ actor-level update, so the exact decoder can find shorter periods.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -56,8 +57,10 @@ class ExactResult:
     periods_tried: int = 0
 
     @property
-    def period(self) -> int:
-        return self.schedule.period if self.schedule else -1
+    def period(self) -> float:
+        # math.inf, not a -1 sentinel: an infeasible decode must compare as
+        # strictly worse than any feasible period (see DecodeResult.period).
+        return self.schedule.period if self.schedule else math.inf
 
 
 class _Timeout(Exception):

@@ -167,6 +167,23 @@ def _obj_comm_volume(ctx: EvalContext) -> float:
     return float(total)
 
 
+@register_objective("sim_period", unit="time units")
+def _obj_sim_period(ctx: EvalContext) -> float:
+    """Measured steady-state iteration interval of the phenotype's
+    *self-timed execution* (repro.sim): actors fire when tokens, space and
+    their core are available, reads/writes contend for interconnects, and
+    the period is read off the firing trace.  Falls back to the analytic
+    schedule period while simulation is disabled
+    (``repro.sim.set_simulation_enabled(False)`` or ``REPRO_SIM_DISABLE``).
+    Batch evaluations can route this objective through the JAX-vectorized
+    backend (``EvaluationEngine(..., sim_backend="vectorized")``)."""
+    from ..sim import simulate_period, simulation_enabled  # deferred: no cycle
+
+    if not simulation_enabled():
+        return float(ctx.schedule.period)
+    return float(simulate_period(ctx.graph, ctx.arch, ctx.schedule))
+
+
 PAPER_OBJECTIVES: Tuple[Objective, ...] = (
     OBJECTIVES["period"],
     OBJECTIVES["memory"],

@@ -25,6 +25,7 @@ __all__ = [
     "Schedule",
     "comm_times",
     "actor_window",
+    "window_task_layout",
     "period_lower_bound",
     "required_capacities",
     "validate_schedule",
@@ -186,6 +187,29 @@ def actor_window(
     t_in = sum(read_tau[(c, a)] for c in g.in_channels(a))
     t_out = sum(write_tau[(a, c)] for c in g.out_channels(a))
     return t_in, actor_exec_time(g, arch, actor_binding, a), t_out
+
+
+def window_task_layout(
+    g: ApplicationGraph,
+    a: str,
+    exec_time: int,
+    read_tau: Dict[Tuple[str, str], int],
+    write_tau: Dict[Tuple[str, str], int],
+) -> List[Tuple[str, Optional[str], int]]:
+    """The packed task sequence of one firing of actor ``a``: reads in
+    ``g.in_channels(a)`` order, the execution, then writes in
+    ``g.out_channels(a)`` order — the layout both CAPS-HMS and the exact
+    decoder assume for the actor window, and the program order the
+    self-timed simulator (:mod:`repro.sim`) executes.  Each entry is
+    ``(kind, channel, duration)`` with ``kind`` ∈ {"read", "exec",
+    "write"} and ``channel`` None for the execution."""
+    out: List[Tuple[str, Optional[str], int]] = []
+    for c in g.in_channels(a):
+        out.append(("read", c, read_tau[(c, a)]))
+    out.append(("exec", None, exec_time))
+    for c in g.out_channels(a):
+        out.append(("write", c, write_tau[(a, c)]))
+    return out
 
 
 def period_lower_bound(

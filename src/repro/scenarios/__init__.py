@@ -5,7 +5,9 @@ from .archs import ArchParams, NOC_PROFILES, generate_architecture
 from .families import FAMILIES, build, exec_times
 from .spec import AppSpec, Scenario, scenario_from_json, validate_scenario
 from .strategies import (
+    LARGE_PARAM_RANGES,
     PARAM_RANGES,
+    SIZE_TIERS,
     sample_app_spec,
     sample_arch_params,
     sample_scenario,
@@ -24,6 +26,8 @@ __all__ = [
     "scenario_from_json",
     "validate_scenario",
     "PARAM_RANGES",
+    "LARGE_PARAM_RANGES",
+    "SIZE_TIERS",
     "sample_app_spec",
     "sample_arch_params",
     "sample_scenario",

@@ -23,6 +23,10 @@ from .spec import AppSpec, Scenario
 
 __all__ = [
     "PARAM_RANGES",
+    "LARGE_PARAM_RANGES",
+    "SIZE_TIERS",
+    "ARCH_RANGES",
+    "LARGE_ARCH_RANGES",
     "sample_app_spec",
     "sample_arch_params",
     "sample_scenario",
@@ -44,6 +48,26 @@ PARAM_RANGES: Dict[str, Dict[str, Sequence[Any]]] = {
     },
 }
 
+# "large" tier: Multicamera-scale graphs (tens of actors, ~100 channels)
+# where decode dominates the sweep and process-parallel evaluation pays
+# off (ROADMAP open item; used by dse_experiments.run_scaling --size).
+LARGE_PARAM_RANGES: Dict[str, Dict[str, Sequence[Any]]] = {
+    "multicast_tree": {"depth": (2, 3), "fanout": (3, 4)},
+    "split_join": {"branches": (4, 6, 8), "stages": (2, 3), "fork_prob": (0.5, 1.0)},
+    "stencil_chain": {"length": (4, 6, 8), "taps": (3, 4)},
+    "camera_pipeline": {"cameras": (3, 4), "chain": (4, 5, 6), "tap_width": (2,)},
+    "random_dag": {
+        "n_actors": (16, 24, 32),
+        "width": (3, 4, 5),
+        "multicast_density": (0.4, 0.7, 1.0),
+    },
+}
+
+SIZE_TIERS: Dict[str, Dict[str, Dict[str, Sequence[Any]]]] = {
+    "standard": PARAM_RANGES,
+    "large": LARGE_PARAM_RANGES,
+}
+
 ARCH_RANGES: Dict[str, Sequence[Any]] = {
     "tiles": (1, 2, 3),
     "cores_per_tile": (2, 3, 4),
@@ -53,33 +77,58 @@ ARCH_RANGES: Dict[str, Sequence[Any]] = {
     "tile_local_kib": (4 * 1024, 8 * 1024),
 }
 
+# Larger targets to pair with "large" graphs (more tiles/cores so big
+# graphs stay schedulable without saturating one crossbar).
+LARGE_ARCH_RANGES: Dict[str, Sequence[Any]] = {
+    "tiles": (3, 4, 6),
+    "cores_per_tile": (4, 6),
+    "type_mix": TYPE_MIXES,
+    "noc_profile": tuple(NOC_PROFILES),
+    "core_local_kib": (512, 1024),
+    "tile_local_kib": (8 * 1024, 16 * 1024),
+}
 
-def sample_app_spec(rng: random.Random, family: Optional[str] = None) -> AppSpec:
+_ARCH_TIERS = {"standard": ARCH_RANGES, "large": LARGE_ARCH_RANGES}
+
+
+def sample_app_spec(
+    rng: random.Random, family: Optional[str] = None, *, size: str = "standard"
+) -> AppSpec:
     fam = family or rng.choice(sorted(FAMILIES))
-    params = {k: rng.choice(list(v)) for k, v in PARAM_RANGES[fam].items()}
+    params = {k: rng.choice(list(v)) for k, v in SIZE_TIERS[size][fam].items()}
     return AppSpec.make(fam, seed=rng.randrange(1_000_000), **params)
 
 
-def sample_arch_params(rng: random.Random) -> ArchParams:
-    return ArchParams(**{k: rng.choice(list(v)) for k, v in ARCH_RANGES.items()})
+def sample_arch_params(rng: random.Random, *, size: str = "standard") -> ArchParams:
+    return ArchParams(**{k: rng.choice(list(v)) for k, v in _ARCH_TIERS[size].items()})
 
 
-def sample_scenario(rng: random.Random, family: Optional[str] = None) -> Scenario:
+def sample_scenario(
+    rng: random.Random, family: Optional[str] = None, *, size: str = "standard"
+) -> Scenario:
     return Scenario(
-        app=sample_app_spec(rng, family),
-        arch=sample_arch_params(rng),
+        app=sample_app_spec(rng, family, size=size),
+        arch=sample_arch_params(rng, size=size),
         arch_seed=rng.randrange(1_000_000),
     )
 
 
 def sample_scenarios(
-    seed: int, n: int, families: Optional[Sequence[str]] = None
+    seed: int,
+    n: int,
+    families: Optional[Sequence[str]] = None,
+    *,
+    size: str = "standard",
 ) -> List[Scenario]:
     """Deterministic list of ``n`` scenarios cycling over ``families``
-    (default: all registered families)."""
-    rng = random.Random(f"scenarios:{seed}")
+    (default: all registered families).  ``size`` selects the parameter
+    tier (``standard`` | ``large``); the default draws are unchanged from
+    the pre-tier sampler."""
+    if size not in SIZE_TIERS:
+        raise KeyError(f"unknown size tier {size!r}; expected {sorted(SIZE_TIERS)}")
+    rng = random.Random(f"scenarios:{seed}" if size == "standard" else f"scenarios:{size}:{seed}")
     fams = list(families or sorted(FAMILIES))
-    return [sample_scenario(rng, fams[i % len(fams)]) for i in range(n)]
+    return [sample_scenario(rng, fams[i % len(fams)], size=size) for i in range(n)]
 
 
 # ----------------------------------------------------------------- hypothesis

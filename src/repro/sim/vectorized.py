@@ -1,0 +1,439 @@
+"""JAX-vectorized self-timed simulator: one ``vmap`` over a phenotype batch.
+
+Executes the same dynamical system as :mod:`repro.sim.events` (the
+normative spec lives in :mod:`repro.sim.model`) on dense ``jnp`` state
+arrays — per-core ownership, per-interconnect busy-until occupancy, MRB
+index arrays ω / ρ — stepped with ``lax`` loops over a bounded event
+horizon and batched with ``jax.vmap``, so an entire NSGA-II population
+sharing one ξ-transformed graph is trace-evaluated in a single compiled
+call (wired into ``EvaluationEngine.evaluate_batch`` via
+``sim_backend="vectorized"``).
+
+The batch must share one (graph, architecture) pair — the task *structure*
+(actor order, task kinds, channels, reader slots) is graph-derived and
+becomes static arrays baked into the compiled step function; everything
+binding-dependent (durations, routes, core indices, capacities) is batched.
+Compiled functions are cached per (structure, horizon).
+
+Backend equality is an enforced invariant: per-actor firing-time sequences
+are bit-identical to the event-driven backend on every phenotype (the
+parity suite asserts this), so periods measured by the shared
+:func:`~repro.sim.model.measure_period` agree exactly — including the
+per-element horizon-doubling policy, which mirrors ``events.simulate``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.architecture import ArchitectureGraph
+from ..core.graph import ApplicationGraph
+from ..core.schedule import Schedule
+from .events import SimResult
+from .model import (
+    READ,
+    WRITE,
+    SimConfig,
+    SimProgram,
+    fallback_period,
+    lower_phenotype,
+    measure_period,
+)
+
+__all__ = ["batch_simulate", "batch_simulate_periods", "INT32_SAFE_HORIZON"]
+
+_I32_INF = np.int32(2**31 - 1)
+# Above this predicted event-time horizon int32 state could overflow; the
+# wrapper falls back to the event-driven backend (Python ints are exact).
+INT32_SAFE_HORIZON = 2**30
+
+_COMPILED: Dict[Tuple, object] = {}
+
+
+# --------------------------------------------------------------- lowering
+def _structure_key(prog: SimProgram, total_iters: int, ports) -> Tuple:
+    return (
+        tuple(prog.actors),
+        tuple(
+            (t.kind, t.channel, t.reader_slot)
+            for a in prog.actors
+            for t in prog.tasks[a]
+        ),
+        tuple(prog.channels),
+        tuple(prog.delay[c] for c in prog.channels),
+        tuple(tuple(prog.readers[c]) for c in prog.channels),
+        tuple(sorted(prog.arch.cores)),
+        tuple(sorted(prog.arch.interconnects)),
+        total_iters,
+        ports,
+    )
+
+
+def _lower_batch(progs: Sequence[SimProgram]):
+    """Static structure arrays (graph-derived, shared) + batched arrays
+    (binding-derived, per phenotype)."""
+    p0 = progs[0]
+    actors = p0.actors
+    channels = p0.channels
+    cores = sorted(p0.arch.cores)
+    ics = sorted(p0.arch.interconnects)
+    c_idx = {c: i for i, c in enumerate(channels)}
+    p_idx = {p: i for i, p in enumerate(cores)}
+    h_idx = {h: i for i, h in enumerate(ics)}
+    A, C, H = len(actors), len(channels), len(ics)
+    R = max((len(p0.readers[c]) for c in channels), default=1)
+
+    n_tasks = np.array([len(p0.tasks[a]) for a in actors], np.int32)
+    offsets = np.concatenate([[0], np.cumsum(n_tasks)[:-1]]).astype(np.int32)
+    T = int(n_tasks.sum())
+    kind = np.zeros(T, np.int32)
+    chan = np.full(T, -1, np.int32)
+    slot = np.zeros(T, np.int32)
+    ti = 0
+    for a in actors:
+        for t in p0.tasks[a]:
+            kind[ti] = t.kind
+            if t.channel is not None:
+                chan[ti] = c_idx[t.channel]
+            slot[ti] = max(t.reader_slot, 0)
+            ti += 1
+
+    reader_mask = np.zeros((C, R), bool)
+    delay = np.zeros(C, np.int32)
+    for c in channels:
+        reader_mask[c_idx[c], : len(p0.readers[c])] = True
+        delay[c_idx[c]] = p0.delay[c]
+    # Start-of-firing gates: which (channel, slot) views actor a reads, and
+    # which channels it writes (bounded-buffer enabling rule).
+    inmask = np.zeros((A, C, R), bool)
+    outmask = np.zeros((A, C), bool)
+    for ai, a in enumerate(actors):
+        for t in p0.tasks[a]:
+            if t.kind == READ:
+                inmask[ai, c_idx[t.channel], t.reader_slot] = True
+            elif t.kind == WRITE:
+                outmask[ai, c_idx[t.channel]] = True
+
+    B = len(progs)
+    dur = np.zeros((B, T), np.int32)
+    route = np.zeros((B, T, H), bool)
+    core_of = np.zeros((B, A), np.int32)
+    gamma = np.ones((B, C), np.int32)
+    for b, pr in enumerate(progs):
+        ti = 0
+        for ai, a in enumerate(actors):
+            core_of[b, ai] = p_idx[pr.core_of[a]]
+            for t in pr.tasks[a]:
+                dur[b, ti] = t.duration
+                for h in t.route:
+                    route[b, ti, h_idx[h]] = True
+                ti += 1
+        for c in channels:
+            gamma[b, c_idx[c]] = pr.capacity[c]
+
+    static = dict(
+        A=A, C=C, P=len(cores), H=H, R=R, T=T,
+        n_tasks=n_tasks, offsets=offsets, kind=kind, chan=chan, slot=slot,
+        reader_mask=reader_mask, delay=delay, inmask=inmask, outmask=outmask,
+    )
+    batched = dict(dur=dur, route=route, core_of=core_of, gamma=gamma)
+    return static, batched
+
+
+# --------------------------------------------------------------- simulator
+def _build_sim(static, total_iters: int, ports: Optional[int]):
+    """Compile the batched simulator for one structure + horizon."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    A = static["A"]
+    C = static["C"]
+    P = static["P"]
+    H = static["H"]
+    T = static["T"]
+    n_tasks = jnp.asarray(static["n_tasks"])
+    offsets = jnp.asarray(static["offsets"])
+    kind = jnp.asarray(static["kind"])
+    chan = jnp.asarray(static["chan"])
+    slot = jnp.asarray(static["slot"])
+    reader_mask = jnp.asarray(static["reader_mask"])
+    delay = jnp.asarray(static["delay"])
+    inmask = jnp.asarray(static["inmask"])
+    outmask = jnp.asarray(static["outmask"])
+    K = int(total_iters)
+    # Every outer step past the first completes ≥ 1 timed task; K·T bounds
+    # the total number of task completions, so this can never cut short.
+    MAX_STEPS = K * T + 2
+    EXEC_K, READ_K, WRITE_K = 1, 0, 2  # mirrors model.READ/EXEC/WRITE
+
+    def avail_matrix(omega, rho, gamma):
+        t = ((omega[:, None] - rho - 1) % gamma[:, None]) + 1
+        return jnp.where(reader_mask & (rho != -1), t, 0)
+
+    def actor_step(ai, carry):
+        st, changed, dur, routes, core_of, gamma = carry
+        (t, in_w, running, busy, cur, iters, owner, ic_busy,
+         omega, rho, active, fire) = st
+
+        cur_a = cur[ai]
+        ti = jnp.clip(offsets[ai] + cur_a, 0, T - 1)
+        kind_t = kind[ti]
+        has_chan = chan[ti] >= 0
+        c_s = jnp.clip(chan[ti], 0, C - 1)
+        slot_t = slot[ti]
+        dur_t = dur[ti]
+        route_t = routes[ti]
+        core_a = core_of[ai]
+
+        avail = avail_matrix(omega, rho, gamma)
+        free = gamma - jnp.max(jnp.where(reader_mask, avail, 0), axis=1)
+        free_c = free[c_s]
+
+        is_running = running[ai]
+        completes = is_running & (busy[ai] <= t)
+
+        idle = ~in_w[ai]
+        inputs_ok = jnp.all(jnp.where(inmask[ai], avail >= 1, True))
+        outputs_ok = jnp.all(jnp.where(outmask[ai], free >= 1, True))
+        fire_start = (
+            idle & (iters[ai] < K) & (owner[core_a] == -1) & inputs_ok & outputs_ok
+        )
+
+        pending = in_w[ai] & ~is_running
+        is_read = kind_t == READ_K
+        is_write = kind_t == WRITE_K
+        read_ok = jnp.where(is_read, avail[c_s, slot_t] >= 1, True)
+        write_ok = jnp.where(is_write, free_c >= 1, True)
+        route_ok = jnp.all(jnp.where(route_t, ic_busy <= t, True))
+        if ports is None:
+            ports_ok = jnp.bool_(True)
+        else:
+            ports_ok = jnp.where(has_chan & (dur_t > 0), active[c_s] < ports, True)
+        can_start = pending & read_ok & write_ok & route_ok & ports_ok
+        timed_start = can_start & (dur_t > 0)
+
+        # Token effects apply at completion — of a previously running task,
+        # or inline for a zero-duration task starting now (model.py rule 3).
+        effect = completes | (can_start & (dur_t == 0))
+        do_read = effect & is_read
+        do_write = effect & is_write
+
+        a_cr = avail[c_s, slot_t]
+        rho_read = jnp.where(
+            a_cr == 1, jnp.int32(-1), (rho[c_s, slot_t] + 1) % gamma[c_s]
+        )
+        rho = rho.at[c_s, slot_t].set(
+            jnp.where(do_read, rho_read, rho[c_s, slot_t])
+        )
+        row = rho[c_s]
+        row_w = jnp.where(reader_mask[c_s] & (row == -1), omega[c_s], row)
+        rho = rho.at[c_s].set(jnp.where(do_write, row_w, row))
+        omega = omega.at[c_s].set(
+            jnp.where(do_write, (omega[c_s] + 1) % gamma[c_s], omega[c_s])
+        )
+        active = active.at[c_s].add(
+            jnp.where(completes & has_chan & (dur_t > 0), -1, 0)
+            + jnp.where(timed_start & has_chan, 1, 0)
+        )
+
+        # fire_start and window completion are mutually exclusive, so the
+        # recording slot is the pre-update iteration count.
+        fire = fire.at[ai, jnp.clip(iters[ai], 0, K - 1)].set(
+            jnp.where(fire_start, t, fire[ai, jnp.clip(iters[ai], 0, K - 1)])
+        )
+
+        advanced = effect
+        window_done = advanced & (cur_a + 1 == n_tasks[ai])
+        cur = cur.at[ai].set(
+            jnp.where(fire_start, 0, jnp.where(advanced, cur_a + 1, cur_a))
+        )
+        iters = iters.at[ai].add(jnp.where(window_done, 1, 0))
+        in_w = in_w.at[ai].set(
+            jnp.where(window_done, False, jnp.where(fire_start, True, in_w[ai]))
+        )
+        owner = owner.at[core_a].set(
+            jnp.where(
+                window_done,
+                jnp.int32(-1),
+                jnp.where(fire_start, ai, owner[core_a]),
+            )
+        )
+        running = running.at[ai].set(
+            jnp.where(completes, False, jnp.where(timed_start, True, running[ai]))
+        )
+        busy = busy.at[ai].set(jnp.where(timed_start, t + dur_t, busy[ai]))
+        ic_busy = jnp.where(route_t & timed_start, t + dur_t, ic_busy)
+
+        changed = changed | completes | fire_start | can_start
+        st = (t, in_w, running, busy, cur, iters, owner, ic_busy,
+              omega, rho, active, fire)
+        return (st, changed, dur, routes, core_of, gamma)
+
+    def sweep(st, dur, routes, core_of, gamma):
+        # Fixpoint at the current time: passes over the actors in
+        # arbitration order until a pass changes nothing (model.py spec).
+        def one_pass(carry):
+            st, _ = carry
+            out = lax.fori_loop(
+                0, A, actor_step,
+                (st, jnp.bool_(False), dur, routes, core_of, gamma),
+            )
+            return (out[0], out[1])
+
+        return lax.while_loop(lambda c: c[1], one_pass, (st, jnp.bool_(True)))[0]
+
+    def simulate_one(dur, routes, core_of, gamma):
+        st = (
+            jnp.int32(0),                        # t
+            jnp.zeros(A, bool),                  # in_window
+            jnp.zeros(A, bool),                  # running
+            jnp.zeros(A, jnp.int32),             # busy_until
+            jnp.zeros(A, jnp.int32),             # cur task
+            jnp.zeros(A, jnp.int32),             # iterations fired
+            jnp.full(P, -1, jnp.int32),          # core owner
+            jnp.zeros(H, jnp.int32),             # interconnect busy-until
+            delay % gamma,                       # omega
+            jnp.where(                           # rho (δ pre-loads views)
+                reader_mask & (delay[:, None] > 0), 0, -1
+            ).astype(jnp.int32),
+            jnp.zeros(C, jnp.int32),             # active timed accesses
+            jnp.full((A, K), -1, jnp.int32),     # fire times
+        )
+
+        def cond(carry):
+            i, st, dead, done = carry
+            return (i < MAX_STEPS) & ~done & ~dead
+
+        def step(carry):
+            i, st, dead, _ = carry
+            st = sweep(st, dur, routes, core_of, gamma)
+            (t, in_w, running, busy, cur, iters, owner, ic_busy,
+             omega, rho, active, fire) = st
+            done = jnp.all(iters >= K)
+            dead = ~done & ~jnp.any(running)
+            next_t = jnp.min(jnp.where(running, busy, _I32_INF))
+            t = jnp.where(done | dead, t, next_t)
+            st = (t, in_w, running, busy, cur, iters, owner, ic_busy,
+                  omega, rho, active, fire)
+            return (i + 1, st, dead, done)
+
+        _, st, dead, _ = lax.while_loop(
+            cond, step, (jnp.int32(0), st, jnp.bool_(False), jnp.bool_(False))
+        )
+        return st[11], dead, st[0]  # fire_times, deadlocked, horizon
+
+    return jax.jit(jax.vmap(simulate_one))
+
+
+def _get_compiled(static, key):
+    fn = _COMPILED.get(key)
+    if fn is None:
+        fn = _build_sim(static, key[-2], key[-1])
+        _COMPILED[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------- wrappers
+def _run_batch(progs: Sequence[SimProgram], total_iters: int, cfg: SimConfig):
+    static, batched = _lower_batch(progs)
+    key = _structure_key(progs[0], total_iters, cfg.mrb_ports)
+    fn = _get_compiled(static, key)
+    fire, dead, horizon = fn(
+        batched["dur"], batched["route"], batched["core_of"], batched["gamma"]
+    )
+    return np.asarray(fire), np.asarray(dead), np.asarray(horizon)
+
+
+def batch_simulate(
+    g: ApplicationGraph,
+    arch: ArchitectureGraph,
+    schedules: Sequence[Schedule],
+    config: Optional[SimConfig] = None,
+) -> List[SimResult]:
+    """Simulate a batch of phenotypes sharing one (graph, arch) pair.
+
+    Returns one :class:`~repro.sim.events.SimResult` per schedule (no
+    traces).  Each element follows the same horizon-doubling policy as
+    ``events.simulate`` — it is measured at the first horizon in the
+    sequence ``iterations, 2·iterations, …`` where its tail is periodic —
+    so results are backend-identical.
+    """
+    cfg = config or SimConfig()
+    if not schedules:
+        return []
+    progs = [lower_phenotype(g, arch, s) for s in schedules]
+    out: List[Optional[SimResult]] = [None] * len(progs)
+
+    for i, pr in enumerate(progs):
+        if pr.schedule.period * (cfg.max_iterations + 4) > INT32_SAFE_HORIZON:
+            from .events import simulate as ev_simulate
+
+            out[i] = ev_simulate(g, arch, pr.schedule, _no_trace(cfg))
+
+    remaining = [i for i, r in enumerate(out) if r is None]
+    iters = max(2, cfg.iterations)
+    while remaining:
+        sub = [progs[i] for i in remaining]
+        fire, dead, horizon = _run_batch(sub, iters, cfg)
+        still: List[int] = []
+        at_cap = iters >= cfg.max_iterations
+        for j, i in enumerate(remaining):
+            # Post-check the int32 guard: the self-timed horizon can exceed
+            # the analytic-period prediction (contention slows execution),
+            # so a wrapped element is re-run on the exact events backend.
+            if (
+                int(horizon[j]) < 0
+                or int(horizon[j]) >= INT32_SAFE_HORIZON
+                or (fire[j] < -1).any()
+            ):
+                from .events import simulate as ev_simulate
+
+                out[i] = ev_simulate(g, arch, progs[i].schedule, _no_trace(cfg))
+                continue
+            ft = {
+                a: [int(x) for x in fire[j, ai] if x >= 0]
+                for ai, a in enumerate(progs[i].actors)
+            }
+            if bool(dead[j]):
+                out[i] = SimResult(
+                    period=float("inf"), converged=False, deadlocked=True,
+                    iterations=iters, horizon=int(horizon[j]), fire_times=ft,
+                )
+                continue
+            period = measure_period(
+                ft, max_multiplicity=cfg.max_multiplicity, checks=cfg.checks
+            )
+            if period is not None:
+                out[i] = SimResult(
+                    period=period, converged=True, deadlocked=False,
+                    iterations=iters, horizon=int(horizon[j]), fire_times=ft,
+                )
+            elif at_cap:
+                out[i] = SimResult(
+                    period=fallback_period(ft), converged=False,
+                    deadlocked=False, iterations=iters,
+                    horizon=int(horizon[j]), fire_times=ft,
+                )
+            else:
+                still.append(i)
+        remaining = still
+        iters = min(cfg.max_iterations, iters * 2)
+    return [r for r in out if r is not None]
+
+
+def batch_simulate_periods(
+    g: ApplicationGraph,
+    arch: ArchitectureGraph,
+    schedules: Sequence[Schedule],
+    config: Optional[SimConfig] = None,
+) -> List[float]:
+    """Measured steady-state period per phenotype (vectorized backend)."""
+    return [r.period for r in batch_simulate(g, arch, schedules, config)]
+
+
+def _no_trace(cfg: SimConfig) -> SimConfig:
+    from dataclasses import replace
+
+    return replace(cfg, trace=False)

@@ -1,0 +1,355 @@
+"""Self-timed simulator subsystem: period measurement, analytic parity,
+backend equality, trace/Gantt round-trips, the sim_period objective, and
+the infeasible-period regression (ISSUE 3).
+
+The heavy scenario-family parity sweep (all five families × both decoders
+× vectorized backend) is marked slow; the fast tier keeps one structure
+per concern so JIT compilation stays bounded.
+"""
+import json
+import math
+import random
+
+import pytest
+
+from repro.core import (
+    ApplicationGraph,
+    ExplorationProblem,
+    NSGA2Explorer,
+    OBJECTIVES,
+    RandomSearchExplorer,
+    multicast_actors,
+    paper_architecture,
+    pipeline_delays,
+    sobel,
+    substitute_mrbs,
+)
+from repro.core.binding import CHANNEL_DECISIONS
+from repro.core.caps_hms import DecodeResult, decode_via_heuristic
+from repro.core.ilp import ExactResult, decode_via_ilp
+from repro.core.schedule import (
+    attach_binding,
+    comm_times,
+    period_lower_bound,
+)
+from repro.scenarios import ArchParams, generate_architecture, sample_scenario
+from repro.scenarios.proptest import given, settings, st
+from repro.sim import (
+    SimConfig,
+    SimTrace,
+    ascii_gantt,
+    batch_simulate,
+    check_sim_invariants,
+    contention_free,
+    measure_period,
+    set_simulation_enabled,
+    simulate,
+    simulate_period,
+    svg_gantt,
+)
+
+NO_TRACE = SimConfig(trace=False)
+
+
+# ------------------------------------------------------------ helpers
+def _pipelined_sobel():
+    g, arch = sobel(), paper_architecture()
+    gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
+    return gt, arch
+
+
+def _random_decode(gt, arch, rng, decoder="caps_hms", tries=40):
+    cores = sorted(arch.cores)
+    for _ in range(tries):
+        ba = {
+            a: rng.choice(
+                [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in gt.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
+        if decoder == "caps_hms":
+            res = decode_via_heuristic(gt, arch, cd, ba)
+        else:
+            res = decode_via_ilp(gt, arch, cd, ba, time_budget_s=0.5)
+        if res.feasible:
+            return res
+    raise AssertionError("no feasible decode found")
+
+
+def _lower_bound(gt, arch, sched):
+    attach_binding(gt, sched.channel_binding)
+    rt, wt = comm_times(gt, arch, sched.actor_binding, sched.channel_binding)
+    return period_lower_bound(gt, arch, sched.actor_binding, rt, wt)
+
+
+# ---------------------------------------------------- period measurement
+def test_measure_period_simple_and_multiplicity():
+    # Plain rate: every actor fires every 10 units.
+    ft = {"a": list(range(0, 400, 10)), "b": list(range(3, 403, 10))}
+    assert measure_period(ft) == 10.0
+    # Multiplicity 2: intervals alternate 9, 11 → period (9+11)/2.
+    ts, t = [], 0
+    for i in range(40):
+        ts.append(t)
+        t += 9 if i % 2 == 0 else 11
+    assert measure_period({"a": ts}) == 10.0
+
+
+def test_measure_period_disconnected_components_take_max():
+    slow = list(range(0, 1000, 50))
+    fast = list(range(0, 140, 7))
+    assert measure_period({"s": slow, "f": fast}) == 50.0
+
+
+def test_measure_period_excludes_drain_tail():
+    # Steady 10s, then a drained tail of fast intervals: the guard must
+    # keep the steady value (the tail is ~len/4 long).
+    ts, t = [], 0
+    for _ in range(30):
+        ts.append(t)
+        t += 10
+    for _ in range(6):
+        ts.append(t)
+        t += 3
+    assert measure_period({"a": ts}) == 10.0
+
+
+def test_measure_period_unconverged_returns_none():
+    rng = random.Random(0)
+    ts, t = [], 0
+    for _ in range(40):
+        ts.append(t)
+        t += rng.randint(5, 50)
+    assert measure_period({"a": ts}) is None
+
+
+# ------------------------------------------------------- analytic parity
+def test_single_core_mapping_matches_analytic_period():
+    """All actors on one core, PROD placements: the core serializes every
+    window, so self-timed period == analytic period == P_lb."""
+    gt, arch = _pipelined_sobel()
+    core = sorted(arch.cores)[0]
+    ba = {a: core for a in gt.actors}
+    cd = {c: "PROD" for c in gt.channels}
+    res = decode_via_heuristic(gt, arch, cd, ba)
+    assert res.feasible
+    sim = simulate(gt, arch, res.schedule, NO_TRACE)
+    assert sim.converged and not sim.deadlocked
+    assert sim.period == res.schedule.period == _lower_bound(gt, arch, res.schedule)
+
+
+def test_contention_free_chain_matches_analytic_period():
+    """Two actors on separate cores, channel in the producer's core-local
+    memory: no resource is shared between actors (contention_free is True)
+    and the simulated period equals the analytic one exactly."""
+    g = ApplicationGraph("chain2")
+    g.add_actor("A", {"t1": 7})
+    g.add_actor("B", {"t1": 4})
+    g.add_channel("c", "A", "B", delay=1, capacity=2, token_bytes=64)
+    arch = generate_architecture(
+        ArchParams(tiles=1, cores_per_tile=2, type_mix="fast_only"), seed=0
+    )
+    ba = {"A": sorted(arch.cores)[0], "B": sorted(arch.cores)[1]}
+    res = decode_via_heuristic(g, arch, {"c": "PROD"}, ba)
+    assert res.feasible
+    assert contention_free(g, arch, res.schedule)
+    sim = simulate(g, arch, res.schedule, NO_TRACE)
+    assert sim.converged
+    assert sim.period == res.schedule.period == _lower_bound(g, arch, res.schedule)
+    assert check_sim_invariants(g, arch, res.schedule) == []
+
+
+def test_contended_mapping_never_beats_lower_bound():
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(7)
+    for _ in range(4):
+        res = _random_decode(gt, arch, rng)
+        sim = simulate(gt, arch, res.schedule, NO_TRACE)
+        assert not sim.deadlocked
+        assert sim.period >= _lower_bound(gt, arch, res.schedule) - 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sim_invariants_on_generated_scenarios(seed):
+    """Event-driven self-timed execution of decoded generated scenarios:
+    never deadlocks, converges to a periodic regime, never beats P_lb, and
+    equals the analytic period whenever the mapping is contention-free."""
+    rng = random.Random(f"sim-prop:{seed}")
+    sc = sample_scenario(rng)
+    g, arch = sc.build()
+    gt = pipeline_delays(
+        substitute_mrbs(g, {a: rng.randint(0, 1) for a in multicast_actors(g)})
+    )
+    res = _random_decode(gt, arch, rng)
+    assert check_sim_invariants(gt, arch, res.schedule) == [], sc.name
+
+
+# ------------------------------------------------------- backend parity
+def test_vectorized_matches_events_on_sobel_batch():
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(3)
+    scheds = [_random_decode(gt, arch, rng).schedule for _ in range(4)]
+    ev = [simulate(gt, arch, s, NO_TRACE) for s in scheds]
+    vec = batch_simulate(gt, arch, scheds, NO_TRACE)
+    for e, v in zip(ev, vec):
+        assert e.fire_times == v.fire_times
+        assert e.period == v.period
+        assert e.deadlocked == v.deadlocked
+
+
+def test_vectorized_matches_events_with_mrb_ports():
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(4)
+    sched = _random_decode(gt, arch, rng).schedule
+    cfg = SimConfig(trace=False, mrb_ports=1)
+    e = simulate(gt, arch, sched, cfg)
+    (v,) = batch_simulate(gt, arch, [sched], cfg)
+    assert e.fire_times == v.fire_times and e.period == v.period
+    # Serializing every channel access cannot make execution faster.
+    free = simulate(gt, arch, sched, NO_TRACE)
+    assert e.period >= free.period - 1e-9
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_parity_sweep_families_and_decoders(seed):
+    """Slow sweep: across scenario families and both decoders, the two
+    backends report identical firing sequences and periods, and every
+    sim/analytic invariant holds."""
+    rng = random.Random(f"sim-parity:{seed}")
+    sc = sample_scenario(rng)
+    g, arch = sc.build()
+    gt = pipeline_delays(
+        substitute_mrbs(g, {a: rng.randint(0, 1) for a in multicast_actors(g)})
+    )
+    decoder = "caps_hms" if seed % 2 == 0 else "ilp"
+    res = _random_decode(gt, arch, rng, decoder=decoder)
+    e = simulate(gt, arch, res.schedule, NO_TRACE)
+    (v,) = batch_simulate(gt, arch, [res.schedule], NO_TRACE)
+    assert e.fire_times == v.fire_times, (sc.name, decoder)
+    assert e.period == v.period
+    assert check_sim_invariants(gt, arch, res.schedule, result=e) == [], sc.name
+
+
+# ------------------------------------------------------- trace & gantt
+def test_trace_segments_do_not_overlap_and_roundtrip(tmp_path):
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(11)
+    res = _random_decode(gt, arch, rng)
+    sim = simulate(gt, arch, res.schedule)
+    trace = sim.trace
+    assert trace is not None and trace.segments
+    by_res = {}
+    for s in trace.segments:
+        assert s.end > s.start
+        by_res.setdefault(s.resource, []).append((s.start, s.end))
+    for r, ivals in by_res.items():
+        ivals.sort()
+        for (s1, e1), (s2, _) in zip(ivals, ivals[1:]):
+            assert e1 <= s2, f"overlap on {r}"
+    path = trace.save(str(tmp_path / "trace.json"))
+    back = SimTrace.load(path)
+    assert back.to_json() == trace.to_json()
+    art = ascii_gantt(trace, width=80)
+    assert any(a[0] in art.lower() for a in gt.actors)
+    svg = svg_gantt(trace)
+    assert svg.startswith("<svg") and svg.endswith("</svg>") and "rect" in svg
+
+
+# --------------------------------------------------- sim_period objective
+def test_sim_period_objective_registered_and_falls_back():
+    assert "sim_period" in OBJECTIVES
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(13)
+    res = _random_decode(gt, arch, rng)
+    from repro.core.problem import EvalContext, get_objective
+
+    obj = get_objective("sim_period")
+    ctx = EvalContext(gt, arch, res.schedule)
+    measured = obj(ctx)
+    assert measured == simulate_period(gt, arch, res.schedule)
+    prev = set_simulation_enabled(False)
+    try:
+        assert obj(ctx) == float(res.schedule.period)
+    finally:
+        set_simulation_enabled(prev)
+
+
+def test_explorer_end_to_end_with_sim_period():
+    """sim_period is selectable in an ExplorationProblem and drives a full
+    explorer run; every feasible archive point carries a measured period
+    that respects the lower bound."""
+    g, arch = sobel(), paper_architecture()
+    problem = ExplorationProblem(
+        graph=g, arch=arch, strategy="MRB_Explore",
+        objectives=("sim_period", "memory", "core_cost"),
+    )
+    run = RandomSearchExplorer(samples=12, batch=6, seed=3).explore(problem)
+    assert run.problem.objectives == ("sim_period", "memory", "core_cost")
+    feas = [i for i in run.archive if i.feasible]
+    assert feas
+    for ind in feas:
+        assert ind.objectives[0] > 0
+        assert math.isfinite(ind.objectives[0])
+
+
+def test_engine_honours_sim_config_on_events_route():
+    """A non-default sim_config defers sim_period past decode so the
+    engine's config reaches the simulator even without the vectorized
+    backend (the inline objective can only use defaults)."""
+    from repro.core import GenotypeSpace
+    from repro.core.engine import EvaluationEngine
+
+    g, arch = sobel(), paper_architecture()
+    space = GenotypeSpace(g, arch)
+    rng = random.Random(9)
+    gt = space.random(rng)
+    objs = ("sim_period", "memory", "core_cost")
+    cfg = SimConfig(trace=False, mrb_ports=1)
+    with EvaluationEngine(space, objectives=objs, sim_config=cfg) as eng:
+        ind = eng.evaluate(gt)
+    assert ind.feasible
+    graph = eng._transformed(gt.xi)
+    assert ind.objectives[0] == simulate_period(graph, arch, ind.schedule, cfg)
+    with EvaluationEngine(space, objectives=objs) as eng2:
+        default = eng2.evaluate(gt)
+    # Serializing channel accesses can only slow execution down.
+    assert ind.objectives[0] >= default.objectives[0] - 1e-9
+
+
+@pytest.mark.slow
+def test_engine_vectorized_backend_is_bit_identical():
+    g, arch = sobel(), paper_architecture()
+    objs = ("sim_period", "memory", "core_cost")
+    explorer = NSGA2Explorer(population=10, offspring=5, generations=2, seed=5)
+    fronts = {}
+    for backend in (None, "vectorized"):
+        problem = ExplorationProblem(
+            graph=g, arch=arch, strategy="MRB_Explore", objectives=objs
+        )
+        with problem.make_engine(sim_backend=backend) as eng:
+            run = explorer.explore(problem, engine=eng)
+        fronts[backend] = run.front
+    assert fronts[None] == fronts["vectorized"]
+
+
+# --------------------------------------- infeasible-period regression
+def test_infeasible_decode_period_is_inf():
+    """ISSUE 3 satellite: an infeasible decode's period must be math.inf so
+    period comparisons never prefer it (the old -1 sentinel did)."""
+    assert DecodeResult(None, False).period == math.inf
+    assert ExactResult(None, False, False).period == math.inf
+    gt, arch = _pipelined_sobel()
+    core = sorted(arch.cores)[0]
+    ba = {a: core for a in gt.actors}
+    cd = {c: "GLOBAL" for c in gt.channels}
+    bad = decode_via_heuristic(gt, arch, cd, ba, max_period=1)
+    assert not bad.feasible
+    assert bad.period == math.inf
+    good = decode_via_heuristic(gt, arch, cd, ba)
+    assert good.feasible
+    # The whole point: min() over periods picks the feasible phenotype.
+    assert min([bad, good], key=lambda r: r.period) is good
