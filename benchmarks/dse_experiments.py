@@ -144,6 +144,51 @@ PARALLEL_DECODE_ACTORS = 12
 DEFAULT_PARALLEL_WORKERS = 2
 
 
+def _scaling_cell(payload):
+    """One (scenario × tier) cell of the scaling sweep — module-level so
+    the per-scenario process pool can pickle it.  Reconstructs the
+    scenario from its JSON spec and returns the result row."""
+    from repro.scenarios import scenario_from_json
+
+    (key, sc_json, tier, gens, pop, off, seed, n_workers, size) = payload
+    sc = scenario_from_json(sc_json)
+    problem = ExplorationProblem.from_scenario(sc)
+    g = problem.graph
+    workers = max(n_workers, 0)
+    if n_workers == 0 and len(g.actors) >= PARALLEL_DECODE_ACTORS:
+        workers = DEFAULT_PARALLEL_WORKERS
+    explorer = NSGA2Explorer(
+        population=pop, offspring=off, generations=gens, seed=seed
+    )
+    engine = problem.make_engine(n_workers=workers)
+    fronts, times = {}, {}
+    with engine:
+        for strategy in ("Reference", "MRB_Explore"):
+            problem.strategy = strategy
+            t0 = time.monotonic()
+            res = explorer.explore(problem, engine=engine)
+            times[strategy] = time.monotonic() - t0
+            fronts[strategy] = res.front
+        stats = engine.stats()
+    union = nondominated([p for f in fronts.values() for p in f])
+    hv = {s: relative_hypervolume(f, union) for s, f in fronts.items()}
+    row = {
+        "scenario": sc_json,
+        "tier": tier,
+        "size_tier": size,
+        "n_workers": workers,
+        "size": {"A": len(g.actors), "C": len(g.channels)},
+        "hv": hv,
+        # Strategies share one engine: Reference runs cold,
+        # MRB_Explore warm-starts on its cache — times are not a
+        # strategy-cost comparison (use isolated engines for that).
+        "times": times,
+        "times_note": "shared engine; second strategy warm-starts",
+        "engine": stats,
+    }
+    return key, row
+
+
 def run_scaling(
     report=None,
     *,
@@ -151,6 +196,7 @@ def run_scaling(
     per_family: int = 3,
     seed: int = 0,
     n_workers: int = 0,
+    jobs: int = 0,
     size: str = "standard",
     out_dir: str = "runs/dse",
 ):
@@ -163,8 +209,16 @@ def run_scaling(
     actors) the engine defaults to ``DEFAULT_PARALLEL_WORKERS`` decode
     workers when ``n_workers`` is left at 0 — pass ``n_workers < 0`` to
     force serial decoding everywhere.
-    Writes ``runs/dse/scaling_results.json``; rows go to ``report`` when
-    given (benchmarks.run harness) or stdout otherwise.
+
+    ``jobs`` distributes the sweep itself per-scenario across processes
+    (ROADMAP open item): 0 picks the default — serial on the standard
+    tier, ``os.cpu_count() // 2`` on the large tier, where per-scenario
+    wall time dominates; with ``jobs > 1`` the in-engine decode pool
+    defaults to serial so the two pool levels don't oversubscribe.
+    Results are merged in deterministic scenario order, so the output is
+    identical to a serial run.  Writes ``runs/dse/scaling_results.json``;
+    rows go to ``report`` when given (benchmarks.run harness) or stdout
+    otherwise.
     """
     from repro.scenarios import FAMILIES, sample_scenarios
 
@@ -175,55 +229,38 @@ def run_scaling(
     report = report or _Print()
     os.makedirs(out_dir, exist_ok=True)
     fams = list(families or sorted(FAMILIES))
-    results = {}
+    if jobs <= 0:
+        jobs = max(1, (os.cpu_count() or 2) // 2) if size == "large" else 1
+    cell_workers = n_workers if jobs <= 1 else (n_workers or -1)
+    payloads = []
     for fam in fams:
         scenarios = sample_scenarios(seed=seed, n=per_family, families=[fam], size=size)
         for tier_i, sc in enumerate(scenarios):
             tier = list(BUDGET_TIERS)[tier_i % len(BUDGET_TIERS)]
             gens, pop, off = BUDGET_TIERS[tier]
-            problem = ExplorationProblem.from_scenario(sc)
-            g, arch = problem.graph, problem.arch
-            workers = max(n_workers, 0)
-            if n_workers == 0 and len(g.actors) >= PARALLEL_DECODE_ACTORS:
-                workers = DEFAULT_PARALLEL_WORKERS
-            explorer = NSGA2Explorer(
-                population=pop, offspring=off, generations=gens, seed=seed
-            )
-            engine = problem.make_engine(n_workers=workers)
-            fronts, times = {}, {}
-            with engine:
-                for strategy in ("Reference", "MRB_Explore"):
-                    problem.strategy = strategy
-                    t0 = time.monotonic()
-                    res = explorer.explore(problem, engine=engine)
-                    times[strategy] = time.monotonic() - t0
-                    fronts[strategy] = res.front
-            union = nondominated([p for f in fronts.values() for p in f])
-            hv = {s: relative_hypervolume(f, union) for s, f in fronts.items()}
             key = f"{fam}/{tier_i}:{sc.app.seed}"
-            results[key] = {
-                "scenario": sc.to_json(),
-                "tier": tier,
-                "size_tier": size,
-                "n_workers": workers,
-                "size": {"A": len(g.actors), "C": len(g.channels)},
-                "hv": hv,
-                # Strategies share one engine: Reference runs cold,
-                # MRB_Explore warm-starts on its cache — times are not a
-                # strategy-cost comparison (use isolated engines for that).
-                "times": times,
-                "times_note": "shared engine; second strategy warm-starts",
-                "engine": engine.stats(),
-            }
-            report.add(
-                f"fig9gen.{key}",
-                value=f"explore={hv['MRB_Explore']:.3f} reference={hv['Reference']:.3f}",
-                derived=(
-                    f"|A|={len(g.actors)} |C|={len(g.channels)} "
-                    f"explore_wins={hv['MRB_Explore'] >= hv['Reference']} "
-                    f"hits={engine.stats()['hits']}"
-                ),
+            payloads.append(
+                (key, sc.to_json(), tier, gens, pop, off, seed, cell_workers, size)
             )
+    if jobs > 1:
+        from concurrent.futures import ProcessPoolExecutor
+
+        with ProcessPoolExecutor(max_workers=jobs) as pool:
+            rows = list(pool.map(_scaling_cell, payloads))
+    else:
+        rows = [_scaling_cell(p) for p in payloads]
+    results = dict(rows)
+    for key, row in rows:
+        hv = row["hv"]
+        report.add(
+            f"fig9gen.{key}",
+            value=f"explore={hv['MRB_Explore']:.3f} reference={hv['Reference']:.3f}",
+            derived=(
+                f"|A|={row['size']['A']} |C|={row['size']['C']} "
+                f"explore_wins={hv['MRB_Explore'] >= hv['Reference']} "
+                f"hits={row['engine']['hits']}"
+            ),
+        )
     with open(os.path.join(out_dir, "scaling_results.json"), "w") as f:
         json.dump(results, f, indent=2)
     wins = sum(
@@ -231,7 +268,7 @@ def run_scaling(
     )
     report.add(
         "fig9gen.summary",
-        value=f"explore_wins={wins}/{len(results)}",
+        value=f"explore_wins={wins}/{len(results)} jobs={jobs}",
         derived="selective MRB replacement ⪰ never-replace on generated families",
     )
     return results
@@ -248,12 +285,17 @@ if __name__ == "__main__":
         "--n-workers", type=int, default=0,
         help="0: auto (parallel on Multicamera-sized graphs); <0: force serial",
     )
+    ap.add_argument(
+        "--jobs", type=int, default=0,
+        help="per-scenario sweep processes; 0: auto (serial on standard, "
+             "cpu_count//2 on the large tier)",
+    )
     ap.add_argument("--size", choices=("standard", "large"), default="standard")
     args = ap.parse_args()
     if args.scaling:
         run_scaling(
             per_family=args.per_family, seed=args.seed,
-            n_workers=args.n_workers, size=args.size,
+            n_workers=args.n_workers, jobs=args.jobs, size=args.size,
         )
     else:
         ap.error("pass --scaling (the paper matrix runs via benchmarks.run)")

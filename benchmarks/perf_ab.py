@@ -186,18 +186,29 @@ def dse_cache_ab(repeats: int = 5):
 
 
 def sim_backends_ab(batch: int = 64, repeats: int = 3):
-    """A/B the self-timed simulator backends on one NSGA-II-population-sized
-    batch: ``batch`` feasible Sobel phenotypes (MRB_Always ξ, random
-    bindings, CAPS-HMS decode — one shared transformed graph, as
-    ``EvaluationEngine.evaluate_batch`` would hand the vectorized backend).
+    """A/B the three self-timed simulator backends on one
+    NSGA-II-population-sized batch: ``batch`` feasible Sobel phenotypes
+    (MRB_Always ξ, random bindings, CAPS-HMS decode — one shared
+    transformed graph, as ``EvaluationEngine.evaluate_batch`` hands the
+    batched backends).
 
-      events       per-phenotype event-driven simulate_period loop
-      vec_cold     batch_simulate_periods incl. JIT compilation
-      vec_warm     batch_simulate_periods with compiled functions cached
+      events        per-phenotype event-driven simulate_period loop
+      vec_cold      fused-rounds lax backend incl. JIT compilation
+      vec_cold2     second *distinct* structure-identical batch — must hit
+                    the compiled function (no retrace; asserted via the
+                    module trace counter) and land within 1.5x of warm
+      vec_warm      compiled + warmed
+      pallas_cold / pallas_warm   Pallas actor-step kernel
+                    (repro.kernels.sim_step; interpreter mode off-TPU)
 
-    Periods must be identical element-for-element across backends (the
-    repo-wide parity invariant).  Events/warm arms are interleaved and the
-    per-arm minimum reported; writes BENCH_sim.json at the repo root.
+    Periods must be identical element-for-element across all three
+    backends (the repo-wide parity invariant).  Warm arms are interleaved
+    and the per-arm minimum reported (shared-container wall-clock noise
+    swamps sequential medians).  BENCH_sim.json keeps a ``history`` list
+    — every run appends the previous head — so the bench trajectory
+    across PRs is inspectable, and the run *fails* (CI slow job) when a
+    warm batched-backend speedup vs events drops below the last recorded
+    value by more than 20% (set REPRO_BENCH_NO_GATE=1 to bypass).
     """
     import random
     import time as _time
@@ -208,63 +219,133 @@ def sim_backends_ab(batch: int = 64, repeats: int = 3):
     from repro.core.dse import pipeline_delays
     from repro.core.graph import multicast_actors
     from repro.core.mrb import substitute_mrbs
-    from repro.sim import SimConfig, batch_simulate_periods, simulate_period
+    from repro.sim import (
+        SimConfig,
+        batch_simulate_periods,
+        simulate_period,
+        trace_count,
+    )
     from repro.sim import vectorized as _vec
 
     g, arch = sobel(), paper_architecture()
     gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
     rng = random.Random(2024)
     cores = sorted(arch.cores)
-    scheds = []
-    while len(scheds) < batch:
-        ba = {
-            a: rng.choice(
-                [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
-            )
-            for a in gt.actors
-        }
-        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
-        res = decode_via_heuristic(gt, arch, cd, ba)
-        if res.feasible:
-            scheds.append(res.schedule)
+
+    def draw_batch(n):
+        out = []
+        while len(out) < n:
+            ba = {
+                a: rng.choice(
+                    [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
+                )
+                for a in gt.actors
+            }
+            cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
+            res = decode_via_heuristic(gt, arch, cd, ba)
+            if res.feasible:
+                out.append(res.schedule)
+        return out
+
+    scheds = draw_batch(batch)
+    scheds2 = draw_batch(batch)  # distinct values, same structure
 
     cfg = SimConfig(trace=False)
+    results = {}
+    periods = {}
+
     _vec._COMPILED.clear()
     t0 = _time.monotonic()
-    vec_first = batch_simulate_periods(gt, arch, scheds, cfg)
-    vec_cold = _time.monotonic() - t0
+    periods["vec_first"] = batch_simulate_periods(gt, arch, scheds, cfg)
+    results["vec_cold"] = _time.monotonic() - t0
+    traces_before = trace_count()
+    t0 = _time.monotonic()
+    periods["vec_b2"] = batch_simulate_periods(gt, arch, scheds2, cfg)
+    results["vec_cold2"] = _time.monotonic() - t0
+    assert trace_count() == traces_before, (
+        "structure-identical batch retraced the compiled simulator"
+    )
+    t0 = _time.monotonic()
+    periods["pallas_first"] = batch_simulate_periods(
+        gt, arch, scheds, cfg, backend="pallas"
+    )
+    results["pallas_cold"] = _time.monotonic() - t0
 
-    ev_walls, warm_walls = [], []
-    ev_periods = vec_periods = None
+    walls = {"events": [], "vec_warm": [], "pallas_warm": []}
     for _ in range(repeats):
         t0 = _time.monotonic()
-        ev_periods = [simulate_period(gt, arch, s, cfg) for s in scheds]
-        ev_walls.append(_time.monotonic() - t0)
+        periods["events"] = [simulate_period(gt, arch, s, cfg) for s in scheds]
+        walls["events"].append(_time.monotonic() - t0)
         t0 = _time.monotonic()
-        vec_periods = batch_simulate_periods(gt, arch, scheds, cfg)
-        warm_walls.append(_time.monotonic() - t0)
+        periods["vec"] = batch_simulate_periods(gt, arch, scheds, cfg)
+        walls["vec_warm"].append(_time.monotonic() - t0)
+        t0 = _time.monotonic()
+        periods["pallas"] = batch_simulate_periods(
+            gt, arch, scheds, cfg, backend="pallas"
+        )
+        walls["pallas_warm"].append(_time.monotonic() - t0)
+    for arm, ws in walls.items():
+        results[arm] = min(ws)
 
-    assert ev_periods == vec_periods == vec_first, "simulator backends diverged"
-    results = {
-        "events": min(ev_walls),
-        "vec_cold": vec_cold,
-        "vec_warm": min(warm_walls),
+    assert (
+        periods["events"] == periods["vec"] == periods["vec_first"]
+        == periods["pallas"] == periods["pallas_first"]
+    ), "simulator backends diverged"
+    ev_b2 = [simulate_period(gt, arch, s, cfg) for s in scheds2]
+    assert ev_b2 == periods["vec_b2"], "second-batch periods diverged"
+
+    speedups = {
+        "vectorized": results["events"] / results["vec_warm"],
+        "pallas": results["events"] / results["pallas_warm"],
     }
-    for arm, wall in results.items():
-        print(f"arm={arm:9s} wall={wall:.3f}s", flush=True)
-    print(f"speedup vec_warm vs events: {results['events'] / results['vec_warm']:.2f}x")
+    fast_arm = max(speedups, key=speedups.get)
+    cold2_vs_warm = results["vec_cold2"] / results["vec_warm"]
+    for arm in ("events", "vec_cold", "vec_cold2", "vec_warm",
+                "pallas_cold", "pallas_warm"):
+        print(f"arm={arm:12s} wall={results[arm]:.3f}s", flush=True)
+    for name, s in speedups.items():
+        print(f"speedup {name} warm vs events: {s:.2f}x")
+    print(f"fast path: {fast_arm} ({speedups[fast_arm]:.2f}x)")
+    print(f"cold2 vs warm (no-retrace second batch): {cold2_vs_warm:.2f}x")
     print(f"periods identical across backends: OK ({batch} phenotypes)")
 
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    prev = None
+    try:
+        with open(bench_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        pass
+    history = list(prev.get("history", [])) if prev else []
+    if prev:
+        history.append(
+            {k: prev.get(k) for k in ("arms", "speedups", "periods_identical")}
+        )
     bench = {
         "experiment": "sim_backends",
         "config": {"app": "Sobel", "xi": "MRB_Always", "batch": batch,
                    "repeats": repeats, "iterations": cfg.iterations,
                    "max_iterations": cfg.max_iterations},
         "arms": results,
-        "speedup_vec_warm_vs_events": results["events"] / results["vec_warm"],
+        "speedups": speedups,
+        "fast_path": fast_arm,
+        "speedup_fast_path_vs_events": speedups[fast_arm],
+        "cold2_vs_warm": cold2_vs_warm,
         "periods_identical": True,
+        "history": history[-24:],
     }
-    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+    # Regression gate (CI slow job): each batched backend must stay within
+    # 20% of its last recorded warm speedup.  Checked before the write so
+    # a regressed run never replaces the baseline it failed against.
+    if prev and prev.get("speedups") and not os.environ.get("REPRO_BENCH_NO_GATE"):
+        for name, s in speedups.items():
+            last = prev["speedups"].get(name)
+            if last and s < 0.8 * last:
+                raise SystemExit(
+                    f"sim_backends regression: {name} warm speedup {s:.2f}x "
+                    f"dropped >20% below last recorded {last:.2f}x "
+                    f"(BENCH_sim.json left unchanged)"
+                )
     with open(bench_path, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -64,9 +64,14 @@ CACHE_MODES = ("canonical", "exact", "none")
 #   None / "events"  inline per decode (event-driven reference simulator);
 #   "vectorized"     deferred — decodes carry the analytic period as a
 #                    placeholder, then the whole batch is trace-simulated
-#                    per ξ-group in one JAX vmap call and patched.  Both
-#                    routes yield identical values (enforced backend parity).
-SIM_BACKENDS = (None, "events", "vectorized")
+#                    per ξ-group in one compiled fused-rounds call and
+#                    patched, so an entire NSGA-II generation is a single
+#                    device call;
+#   "pallas"         deferred like "vectorized", through the Pallas
+#                    actor-step kernel (repro.kernels.sim_step; interpreter
+#                    mode off-TPU).  All routes yield identical values
+#                    (enforced backend parity).
+SIM_BACKENDS = (None, "events", "vectorized", "pallas")
 
 
 def _analytic_period_placeholder(ctx) -> float:
@@ -196,13 +201,13 @@ class EvaluationEngine:
         self.sim_backend = sim_backend
         self.sim_config = sim_config
         # Deferred sim: decode with an analytic placeholder, then patch
-        # sim_period afterwards — per ξ group through the vectorized
-        # backend, or per phenotype through the event-driven one.  A
-        # non-default sim_config always defers, so the engine's config is
-        # honoured on every route (the inline objective can only use the
-        # default config).
+        # sim_period afterwards — per ξ group through a batched backend,
+        # or per phenotype through the event-driven one.  A non-default
+        # sim_config always defers, so the engine's config is honoured on
+        # every route (the inline objective can only use the default
+        # config).
         self._sim_defer = "sim_period" in self.objective_names and (
-            sim_backend == "vectorized" or sim_config is not None
+            sim_backend in ("vectorized", "pallas") or sim_config is not None
         )
         self._decode_objs = tuple(
             _SIM_PERIOD_DEFERRED if (self._sim_defer and o.name == "sim_period") else o
@@ -286,10 +291,11 @@ class EvaluationEngine:
 
     def _patch_sim(self, inds: List[Individual]) -> List[Individual]:
         """Replace the deferred ``sim_period`` placeholders with measured
-        periods — one batched vectorized call per ξ pattern (phenotypes in
-        a ξ fiber share their transformed graph), or per-phenotype through
-        the event-driven backend when it was chosen only to honour a
-        non-default ``sim_config``.  Backend parity keeps the two routes
+        periods — one batched call per ξ pattern (phenotypes in a ξ fiber
+        share their transformed graph) through the fused-rounds lax
+        backend or the Pallas kernel, or per-phenotype through the
+        event-driven backend when it was chosen only to honour a
+        non-default ``sim_config``.  Backend parity keeps every route
         value-identical."""
         from ..sim import batch_simulate_periods, simulate_period, simulation_enabled
 
@@ -305,10 +311,10 @@ class EvaluationEngine:
         out = list(inds)
         for xi, idxs in groups.items():
             gt = self._transformed(xi)
-            if self.sim_backend == "vectorized":
+            if self.sim_backend in ("vectorized", "pallas"):
                 periods = batch_simulate_periods(
                     gt, self.space.arch, [inds[i].schedule for i in idxs],
-                    self.sim_config,
+                    self.sim_config, backend=self.sim_backend,
                 )
             else:
                 periods = [
@@ -353,9 +359,9 @@ class EvaluationEngine:
         With ``n_workers > 0`` the unique cache misses are decoded in a
         process pool; the merge is order-deterministic, so results are
         independent of worker scheduling.  With ``sim_backend="vectorized"``
-        the misses' ``sim_period`` values are measured by one batched
-        trace-simulation per ξ group after decoding (identical values to
-        the inline event-driven route — enforced backend parity).
+        or ``"pallas"`` the misses' ``sim_period`` values are measured by
+        one batched trace-simulation per ξ group after decoding (identical
+        values to the inline event-driven route — enforced backend parity).
         """
         if self.n_workers <= 0 and not self._sim_defer:
             return [self.evaluate(gt) for gt in genotypes]

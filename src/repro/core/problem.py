@@ -175,8 +175,11 @@ def _obj_sim_period(ctx: EvalContext) -> float:
     the period is read off the firing trace.  Falls back to the analytic
     schedule period while simulation is disabled
     (``repro.sim.set_simulation_enabled(False)`` or ``REPRO_SIM_DISABLE``).
-    Batch evaluations can route this objective through the JAX-vectorized
-    backend (``EvaluationEngine(..., sim_backend="vectorized")``)."""
+    Batch evaluations can route this objective through a batched backend —
+    the fused-rounds lax implementation
+    (``EvaluationEngine(..., sim_backend="vectorized")``) or the Pallas
+    actor-step kernel (``sim_backend="pallas"``) — so one NSGA-II
+    generation is a single compiled call per ξ group."""
     from ..sim import simulate_period, simulation_enabled  # deferred: no cycle
 
     if not simulation_enabled():

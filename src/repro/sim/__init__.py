@@ -4,15 +4,18 @@ Takes a decoded phenotype — ξ-transformed graph + architecture +
 :class:`~repro.core.schedule.Schedule` — and *runs* it: actors fire when
 input tokens and their bound core are available, reads/writes contend for
 interconnects (and optionally MRB ports), and the steady-state iteration
-interval is measured from the firing trace.  Two backends behind one
+interval is measured from the firing trace.  Three backends behind one
 semantics (:mod:`repro.sim.model`):
 
 * :func:`simulate` / :func:`simulate_period` — event-driven reference with
   per-resource Gantt traces (:class:`SimTrace`, rendered by
   :mod:`repro.sim.gantt`);
-* :func:`batch_simulate` / :func:`batch_simulate_periods` — JAX-vectorized
-  fixed-horizon batch backend (``jax.vmap`` over phenotypes), wired into
-  ``EvaluationEngine.evaluate_batch`` via ``sim_backend="vectorized"``.
+* :func:`batch_simulate` / :func:`batch_simulate_periods` — batched JAX
+  backends sharing one fused actor-parallel round program: the
+  ``vmap``-batched lax implementation (``backend="vectorized"``) and the
+  Pallas actor-step kernel (``backend="pallas"``,
+  :mod:`repro.kernels.sim_step`, interpreter mode off-TPU) — wired into
+  ``EvaluationEngine.evaluate_batch`` via ``sim_backend=``.
 
 The ``sim_period`` objective (registered in :mod:`repro.core.problem`)
 exposes the measured period to explorations; it falls back to the analytic
@@ -35,9 +38,16 @@ from .model import (
     lower_phenotype,
     measure_period,
 )
-from .vectorized import batch_simulate, batch_simulate_periods
+from .vectorized import (
+    BATCH_BACKENDS,
+    batch_simulate,
+    batch_simulate_periods,
+    trace_count,
+)
 
 __all__ = [
+    "BATCH_BACKENDS",
+    "trace_count",
     "SimConfig",
     "SimProgram",
     "TaskSpec",

@@ -189,90 +189,150 @@ def _run(prog: SimProgram, total_iters: int, cfg: SimConfig) -> SimResult:
     out_edges = {
         a: [t.channel for t in prog.tasks[a] if t.kind == WRITE] for a in actors
     }
+    route_sets = {
+        a: [frozenset(t.route) for t in prog.tasks[a]] for a in actors
+    }
+    ports = cfg.mrb_ports
 
-    def advance(a: str, t: int) -> bool:
-        """At most one micro-transition for actor ``a`` at time ``t``."""
+    def apply_effect(a: str, task) -> None:
+        if task.kind == READ:
+            chan_state[task.channel].read(task.reader_slot)
+        elif task.kind == WRITE:
+            chan_state[task.channel].write()
         st = astate[a]
-        tasks = prog.tasks[a]
-
-        def complete(task) -> None:
-            if task.kind == READ:
-                chan_state[task.channel].read(task.reader_slot)
-            elif task.kind == WRITE:
-                chan_state[task.channel].write()
-            if task.channel is not None and task.duration > 0:
-                active[task.channel] -= 1
-            st.cur += 1
-            if st.cur == len(tasks):
-                core_owner[prog.core_of[a]] = None
-                st.in_window = False
-                st.iters += 1
-
-        if st.running:
-            if st.busy_until > t:
-                return False
-            task = tasks[st.cur]
-            st.running = False
-            complete(task)
-            return True
-        if not st.in_window:
-            if st.iters >= total_iters:
-                return False
-            if core_owner[prog.core_of[a]] is not None:
-                return False
-            if any(chan_state[c].available(slot) < 1 for c, slot in in_edges[a]):
-                return False
-            if any(chan_state[c].free() < 1 for c in out_edges[a]):
-                return False
-            core_owner[prog.core_of[a]] = a
-            st.in_window = True
-            st.cur = 0
-            st.window_start = t
-            fire_times[a].append(t)
-            return True
-        # in window, between tasks: try to start tasks[st.cur]
-        task = tasks[st.cur]
-        if task.kind == READ and chan_state[task.channel].available(task.reader_slot) < 1:
-            return False
-        if task.kind == WRITE and chan_state[task.channel].free() < 1:
-            return False
-        if any(ic_busy[h] > t for h in task.route):
-            return False
-        if (
-            cfg.mrb_ports is not None
-            and task.channel is not None
-            and task.duration > 0
-            and active[task.channel] >= cfg.mrb_ports
-        ):
-            return False
-        if task.duration == 0:
-            complete(task)
-            return True
-        for h in task.route:
-            ic_busy[h] = t + task.duration
-        if task.channel is not None:
-            active[task.channel] += 1
-        if cfg.trace:
-            it = st.iters
-            segments.append(
-                Segment(prog.core_of[a], a, task.label, it, t, t + task.duration)
-            )
-            for h in task.route:
-                segments.append(Segment(h, a, task.label, it, t, t + task.duration))
-        st.running = True
-        st.busy_until = t + task.duration
-        return True
+        st.cur += 1
+        if st.cur == len(prog.tasks[a]):
+            core_owner[prog.core_of[a]] = None
+            st.in_window = False
+            st.iters += 1
 
     t = 0
     deadlocked = False
     while True:
-        # Fixpoint sweep at time t (arbitration order; see model docstring).
-        changed = True
-        while changed:
-            changed = False
+        # Synchronous phased rounds at time t until quiescence (the round
+        # discipline is normative — see the model docstring).
+        while True:
+            progressed = False
+            # -- completion phase: capture due tasks once, then apply all
+            # read effects before all write effects (each group order-free).
+            due = [
+                (a, prog.tasks[a][astate[a].cur])
+                for a in actors
+                if astate[a].running and astate[a].busy_until <= t
+            ]
+            for a, task in due:
+                astate[a].running = False
+                if task.channel is not None and task.duration > 0:
+                    active[task.channel] -= 1
+            for a, task in due:
+                if task.kind == READ:
+                    apply_effect(a, task)
+            for a, task in due:
+                if task.kind != READ:
+                    apply_effect(a, task)
+            progressed = bool(due)
+            # -- start phase: window starts first (arbitrated per core) so
+            # the winners' first tasks compete in this round's candidates.
+            core_win: Dict[str, str] = {}
             for a in actors:
-                if advance(a, t):
-                    changed = True
+                st = astate[a]
+                if st.in_window or st.iters >= total_iters:
+                    continue
+                if core_owner[prog.core_of[a]] is not None:
+                    continue
+                if any(chan_state[c].available(s) < 1 for c, s in in_edges[a]):
+                    continue
+                if any(chan_state[c].free() < 1 for c in out_edges[a]):
+                    continue
+                p = prog.core_of[a]
+                if p not in core_win:  # actor order = priority order
+                    core_win[p] = a
+            for p, a in core_win.items():
+                st = astate[a]
+                core_owner[p] = a
+                st.in_window = True
+                st.cur = 0
+                st.window_start = t
+                fire_times[a].append(t)
+                progressed = True
+            task_cands = []
+            for a in actors:
+                st = astate[a]
+                if not st.in_window or st.running:
+                    continue
+                task = prog.tasks[a][st.cur]
+                if (
+                    task.kind == READ
+                    and chan_state[task.channel].available(task.reader_slot) < 1
+                ):
+                    continue
+                if task.kind == WRITE and chan_state[task.channel].free() < 1:
+                    continue
+                if any(ic_busy[h] > t for h in task.route):
+                    continue
+                task_cands.append((a, task, route_sets[a][st.cur]))
+            # Port slots go to the highest-ranked timed candidates …
+            port_blocked = set()
+            if ports is not None:
+                rank: Dict[str, int] = {}
+                for a, task, _ in task_cands:
+                    if task.channel is None or task.duration == 0:
+                        continue
+                    r = rank.get(task.channel, 0)
+                    rank[task.channel] = r + 1
+                    if active[task.channel] + r >= ports:
+                        port_blocked.add(a)
+            # … and a timed start is deferred (to the next round, same t)
+            # when a higher-priority surviving timed candidate shares an
+            # interconnect.  The top candidate always proceeds: progress.
+            winners = []
+            for i, (a, task, route) in enumerate(task_cands):
+                if a in port_blocked:
+                    continue
+                blocked = any(
+                    tb.duration > 0 and b not in port_blocked and (rb & route)
+                    for b, tb, rb in task_cands[:i]
+                )
+                if not blocked:
+                    winners.append((a, task))
+            # -- apply: zero-duration effects (reads before writes), then
+            # timed occupations — all disjoint.
+            for kind in (READ, None):
+                for a, task in winners:
+                    if task.duration == 0 and (task.kind == READ) == (kind == READ):
+                        apply_effect(a, task)
+                        progressed = True
+            for a, task in winners:
+                if task.duration == 0:
+                    continue
+                for h in task.route:
+                    ic_busy[h] = t + task.duration
+                if task.channel is not None:
+                    active[task.channel] += 1
+                if cfg.trace:
+                    it = astate[a].iters
+                    segments.append(
+                        Segment(prog.core_of[a], a, task.label, it, t, t + task.duration)
+                    )
+                    for h in task.route:
+                        segments.append(
+                            Segment(h, a, task.label, it, t, t + task.duration)
+                        )
+                st = astate[a]
+                st.running = True
+                st.busy_until = t + task.duration
+                progressed = True
+            if not progressed:
+                break
+            # Early quiescence: a round whose winners were all timed and
+            # whose candidates all won cannot have enabled anything new at
+            # this instant (timed starts only consume resources; every
+            # token/core effect this round fed the candidate computation
+            # above), so the extra confirming round is skipped.
+            if len(winners) == len(task_cands) and all(
+                task.duration > 0 for _, task in winners
+            ):
+                break
         if all(astate[a].iters >= total_iters for a in actors):
             break
         pending = [astate[a].busy_until for a in actors if astate[a].running]

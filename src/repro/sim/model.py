@@ -18,7 +18,7 @@ definition.  A decoded phenotype (transformed graph g̃_A + architecture +
   MRB index semantics of :class:`~repro.core.mrb.MRBState` (a FIFO is the
   single-reader special case).
 
-Self-timed firing rule (the one both backends implement):
+Self-timed firing rule (the one all backends implement):
 
 1. an actor *starts a firing* when its bound core is free, every input
    channel has ≥ 1 token available from its read view, and every output
@@ -34,11 +34,33 @@ Self-timed firing rule (the one both backends implement):
 3. token effects apply at task *completion* (write deposits, read
    advances ρ), matching the dependency conditions Eqs. 16-18.
 
-At any instant, transitions are applied as a fixpoint: sweep the actors in
-arbitration order, attempt at most one micro-transition each, repeat until
-no state changes; then time jumps to the next task completion.  The sweep
-discipline is part of the semantics — backend equality (asserted by the
-parity tests) depends on it.
+At any instant, transitions are applied in *synchronous phased rounds*
+repeated until quiescence (PR 4 revised this discipline from sequential
+per-actor sweeps so a round is data-parallel over the actors — the
+throughput basis of the batched backends):
+
+* **completion phase** — every running task whose end time has arrived
+  completes; within the phase all read effects apply before all write
+  effects (reads touch only their own ρ view and writes only their own
+  channel, so each group is order-free);
+* **start phase** — window starts (rule 1) are computed from the
+  post-completion state and arbitrated first: per core the
+  highest-priority candidate wins and opens its window immediately, so
+  its first task competes in this very round.  Task-start candidates
+  (rule 2, all resource checks against the current state) are then
+  arbitrated by scheduler priority: with ``mrb_ports`` set, the
+  per-channel port slots go to the highest-ranked timed candidates; a
+  task start is deferred to the next round if any higher-priority
+  non-port-blocked timed candidate shares an interconnect with it (a
+  conservative rule — the top-priority candidate always proceeds, so
+  every non-quiescent round makes progress, and deferred candidates
+  retry at the same instant).  Winners apply together: zero-duration
+  tasks take effect inline (reads before writes again), timed tasks
+  occupy their core/route until ``t + duration``.
+
+When a round changes nothing the instant is quiescent and time jumps to
+the next task completion.  The round discipline is part of the semantics
+— backend equality (asserted by the parity tests) depends on it.
 
 :func:`measure_period` recovers the steady-state iteration interval from
 the firing trace: the execution of this deterministic integer-timed system
@@ -67,6 +89,7 @@ __all__ = [
     "measure_period",
     "fallback_period",
     "contention_free",
+    "predict_horizon",
 ]
 
 READ, EXEC, WRITE = 0, 1, 2
@@ -88,7 +111,10 @@ class SimConfig:
     iterations: int = 16
     max_iterations: int = 128
     mrb_ports: Optional[int] = None
-    max_multiplicity: int = 8
+    # Contended regimes can settle on cycles of many firings (observed
+    # R = 9 on generated split-join scenarios), so the multiplicity search
+    # bound is comfortably above anything seen in the sweeps.
+    max_multiplicity: int = 16
     checks: int = 3
     trace: bool = True
 
@@ -144,14 +170,34 @@ def _distinct_readers(readers: Sequence[str]) -> List[str]:
     return out
 
 
+_GRAPH_MEMO: "weakref.WeakKeyDictionary" = None  # type: ignore[assignment]
+
+
+def _graph_order_readers(g: ApplicationGraph):
+    """Arbitration order + distinct-reader lists are graph-only; memoize
+    them per graph object so batch lowering doesn't redo the topological
+    sort for every phenotype of a shared ξ-transformed graph."""
+    global _GRAPH_MEMO
+    if _GRAPH_MEMO is None:
+        import weakref
+
+        _GRAPH_MEMO = weakref.WeakKeyDictionary()
+    hit = _GRAPH_MEMO.get(g)
+    if hit is None:
+        prio = topological_priorities(g)
+        order = sorted(g.actors, key=lambda a: (-prio[a], a))
+        readers = {c: _distinct_readers(g.consumers[c]) for c in g.channels}
+        hit = (order, readers)
+        _GRAPH_MEMO[g] = hit
+    return hit
+
+
 def lower_phenotype(
     g: ApplicationGraph, arch: ArchitectureGraph, sched: Schedule
 ) -> SimProgram:
     """Lower a decoded phenotype to a :class:`SimProgram`."""
     read_tau, write_tau = comm_times(g, arch, sched.actor_binding, sched.channel_binding)
-    prio = topological_priorities(g)
-    order = sorted(g.actors, key=lambda a: (-prio[a], a))
-    readers = {c: _distinct_readers(g.consumers[c]) for c in g.channels}
+    order, readers = _graph_order_readers(g)
     tasks: Dict[str, List[TaskSpec]] = {}
     for a in order:
         core = sched.actor_binding[a]
@@ -240,6 +286,16 @@ def fallback_period(fire_times: Dict[str, Sequence[int]]) -> float:
             mid = len(ts) // 2
             tail.append((ts[-1] - ts[mid]) / max(1, len(ts) - 1 - mid))
     return max(tail) if tail else float("inf")
+
+
+def predict_horizon(prog: SimProgram, cfg: SimConfig) -> float:
+    """Analytic prediction of the final event time of a full
+    ``max_iterations`` run: the schedule's steady-state period times the
+    firing budget plus pipeline-fill slack.  Contention can push the real
+    horizon past this, so fixed-width backends must post-check their
+    measured horizon too — the prediction only gates the cheap pre-pass
+    (see ``INT32_SAFE_HORIZON`` in :mod:`repro.sim.vectorized`)."""
+    return prog.schedule.period * (cfg.max_iterations + 4)
 
 
 def contention_free(

@@ -46,7 +46,10 @@ from repro.sim import (
     simulate,
     simulate_period,
     svg_gantt,
+    trace_count,
 )
+from repro.sim.model import lower_phenotype, predict_horizon
+from repro.sim.vectorized import INT32_SAFE_HORIZON
 
 NO_TRACE = SimConfig(trace=False)
 
@@ -212,13 +215,78 @@ def test_vectorized_matches_events_with_mrb_ports():
     assert e.period >= free.period - 1e-9
 
 
+def test_pallas_backend_matches_events_on_sobel_batch():
+    """The Pallas actor-step kernel (interpreter mode on CPU) executes the
+    identical round program: bit-identical firing sequences and periods."""
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(5)
+    scheds = [_random_decode(gt, arch, rng).schedule for _ in range(3)]
+    ev = [simulate(gt, arch, s, NO_TRACE) for s in scheds]
+    vp = batch_simulate(gt, arch, scheds, NO_TRACE, backend="pallas")
+    for e, v in zip(ev, vp):
+        assert e.fire_times == v.fire_times
+        assert e.period == v.period
+        assert e.deadlocked == v.deadlocked
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_batched_backend_reuses_compiled_functions():
+    """ISSUE 4 satellite: a second, distinct, structure-identical batch
+    must reuse the compiled simulator — no retrace (module trace-counter
+    hook) — including with donated operand buffers (donation is a no-op
+    warning on CPU)."""
+    gt, arch = _pipelined_sobel()
+    rng = random.Random(6)
+    batch1 = [_random_decode(gt, arch, rng).schedule for _ in range(2)]
+    batch2 = [_random_decode(gt, arch, rng).schedule for _ in range(2)]
+    batch_simulate(gt, arch, batch1, NO_TRACE, donate=True)
+    before = trace_count()
+    out = batch_simulate(gt, arch, batch2, NO_TRACE, donate=True)
+    assert trace_count() == before, "structure-identical batch retraced"
+    ev = [simulate(gt, arch, s, NO_TRACE) for s in batch2]
+    assert [r.period for r in out] == [e.period for e in ev]
+    assert [r.fire_times for r in out] == [e.fire_times for e in ev]
+
+
+def test_int32_overflow_predicted_routes_to_events_backend(monkeypatch):
+    """ISSUE 4 satellite: a phenotype whose predicted horizon exceeds the
+    int32-safe bound must be routed to the exact event-driven backend (and
+    never enter the compiled int32 path), with an identical result."""
+    g = ApplicationGraph("huge")
+    g.add_actor("A", {"t1": 2**24})
+    g.add_actor("B", {"t1": 2**24})
+    g.add_channel("c", "A", "B", delay=1, capacity=2, token_bytes=64)
+    arch = generate_architecture(
+        ArchParams(tiles=1, cores_per_tile=2, type_mix="fast_only"), seed=0
+    )
+    cores = sorted(arch.cores)
+    res = decode_via_heuristic(
+        g, arch, {"c": "PROD"}, {"A": cores[0], "B": cores[1]}
+    )
+    assert res.feasible
+    prog = lower_phenotype(g, arch, res.schedule)
+    assert predict_horizon(prog, NO_TRACE) > INT32_SAFE_HORIZON
+
+    from repro.sim import vectorized as V
+
+    def _boom(*a, **k):
+        raise AssertionError("compiled int32 path used despite overflow risk")
+
+    monkeypatch.setattr(V, "_run_batch", _boom)
+    (v,) = batch_simulate(g, arch, [res.schedule], NO_TRACE)
+    e = simulate(g, arch, res.schedule, NO_TRACE)
+    assert v.fire_times == e.fire_times
+    assert v.period == e.period
+
+
 @pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_parity_sweep_families_and_decoders(seed):
-    """Slow sweep: across scenario families and both decoders, the two
-    backends report identical firing sequences and periods, and every
-    sim/analytic invariant holds."""
+    """Slow sweep: across scenario families and both decoders, all three
+    backends — event-driven, fused-rounds lax, Pallas kernel (interpreter
+    mode on CPU) — report identical firing sequences and periods, and
+    every sim/analytic invariant holds."""
     rng = random.Random(f"sim-parity:{seed}")
     sc = sample_scenario(rng)
     g, arch = sc.build()
@@ -231,6 +299,9 @@ def test_parity_sweep_families_and_decoders(seed):
     (v,) = batch_simulate(gt, arch, [res.schedule], NO_TRACE)
     assert e.fire_times == v.fire_times, (sc.name, decoder)
     assert e.period == v.period
+    (vp,) = batch_simulate(gt, arch, [res.schedule], NO_TRACE, backend="pallas")
+    assert e.fire_times == vp.fire_times, (sc.name, decoder, "pallas")
+    assert e.period == vp.period
     assert check_sim_invariants(gt, arch, res.schedule, result=e) == [], sc.name
 
 
@@ -321,19 +392,19 @@ def test_engine_honours_sim_config_on_events_route():
 
 
 @pytest.mark.slow
-def test_engine_vectorized_backend_is_bit_identical():
+def test_engine_batched_backends_are_bit_identical():
     g, arch = sobel(), paper_architecture()
     objs = ("sim_period", "memory", "core_cost")
     explorer = NSGA2Explorer(population=10, offspring=5, generations=2, seed=5)
     fronts = {}
-    for backend in (None, "vectorized"):
+    for backend in (None, "vectorized", "pallas"):
         problem = ExplorationProblem(
             graph=g, arch=arch, strategy="MRB_Explore", objectives=objs
         )
         with problem.make_engine(sim_backend=backend) as eng:
             run = explorer.explore(problem, engine=eng)
         fronts[backend] = run.front
-    assert fronts[None] == fronts["vectorized"]
+    assert fronts[None] == fronts["vectorized"] == fronts["pallas"]
 
 
 # --------------------------------------- infeasible-period regression
