@@ -1,6 +1,14 @@
 """E2/E3/E4 — paper Figs. 8-11 and Table 2 at reduced scale — plus the
 scenario-family scaling sweep (E5, beyond paper).
 
+Both experiments are now declarative :class:`repro.core.Campaign` specs
+executed by the shared :class:`repro.core.CampaignRunner` (PR 5): one
+matrix of problems × strategies × decoders with per-cell overrides, cell
+artifacts streamed into a resumable RunStore under
+``runs/dse/campaigns/``, and hypervolume/timing folded out of the
+campaign report.  The historical output files (``dse_results.json``,
+``scaling_results.json``) are still written, derived from the report.
+
 The paper runs 2,500 generations × 5 repeats per (app × strategy ×
 decoder); a CPU container gets representative reductions (generations and
 repeats scale linearly — stagnation behavior is already visible at this
@@ -20,16 +28,13 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 from repro.core import (
     APPLICATIONS,
-    ExplorationProblem,
-    NSGA2Explorer,
+    Campaign,
+    CampaignRunner,
     STRATEGIES,
-    nondominated,
     paper_architecture,
-    relative_hypervolume,
 )
 
 # (generations, population, offspring, ilp_budget, include_ilp)
@@ -40,79 +45,76 @@ SCALE = {
 }
 
 
-def run(report, out_dir="runs/dse"):
-    """Runs the six-approach DSE matrix.  If a previous run's results file
-    exists, its rows are replayed instead (set REPRO_DSE_FRESH=1 to force a
-    recompute — the full matrix is ~40 min on this container)."""
-    cached = os.path.join(out_dir, "dse_results.json")
-    if os.path.exists(cached) and not os.environ.get("REPRO_DSE_FRESH"):
-        with open(cached) as f:
-            results = json.load(f)
-        for app_name, res in results.items():
-            for tag, v in sorted(res["hv"].items()):
-                report.add(f"fig8.{app_name}.{tag}", value=f"relHV={v:.3f}",
-                           derived=f"wall={res['times'][tag]:.1f}s (cached)")
-            hv = res["hv"]
-            exp = hv.get("MRB_Explore^caps_hms", 0.0)
-            ref = hv.get("Reference^caps_hms", 0.0)
-            report.add(
-                f"fig9.{app_name}.explore_vs_reference",
-                value=f"explore={exp:.3f} reference={ref:.3f}",
-                derived=f"explore_wins={exp >= ref}",
-            )
-            for strategy in STRATEGIES:
-                h = res["times"].get(f"{strategy}^caps_hms")
-                i = res["times"].get(f"{strategy}^ilp")
-                if h and i:
-                    report.add(
-                        f"table2.{app_name}.{strategy}",
-                        value=f"speedup={i / max(h, 1e-9):.1f}x",
-                        derived=f"ilp={i:.1f}s caps={h:.1f}s (cached)",
-                    )
-        return results
-    os.makedirs(out_dir, exist_ok=True)
+def paper_matrix_campaign() -> Campaign:
+    """The six-approach matrix as one campaign: three apps × three
+    strategies × two decoders, with per-app MOEA budgets and the
+    paper-matching skips/budgets as expansion overrides."""
     arch = paper_architecture()
-    results = {}
+    problems = []
+    overrides = [
+        # ILP decoding gets the historical longer wall-clock cap.
+        {"match": {"decoder": "ilp"}, "set": {"explorer_params": {"time_budget_s": 420}}},
+    ]
     for app_name, factory in APPLICATIONS.items():
         gens, pop, off, ilp_s, with_ilp = SCALE[app_name]
-        g = factory()
-        fronts = {}
-        times = {}
-        for strategy in STRATEGIES:
-            for decoder in (("caps_hms", "ilp") if with_ilp else ("caps_hms",)):
-                tag = f"{strategy}^{decoder}"
-                problem = ExplorationProblem(
-                    graph=g, arch=arch, strategy=strategy, decoder=decoder,
-                    ilp_budget_s=ilp_s,
-                )
-                explorer = NSGA2Explorer(
-                    population=pop, offspring=off, generations=gens, seed=11,
-                    time_budget_s=420 if decoder == "ilp" else 240,
-                )
-                t0 = time.monotonic()
-                res = explorer.explore(problem)
-                times[tag] = time.monotonic() - t0
-                fronts[tag] = res.front
-        union = nondominated([p for f in fronts.values() for p in f])
-        hv = {
-            tag: relative_hypervolume(front, union) for tag, front in fronts.items()
-        }
-        results[app_name] = {"hv": hv, "times": times,
-                             "fronts": {k: list(map(list, v)) for k, v in fronts.items()}}
-        for tag, v in sorted(hv.items()):
+        problems.append(
+            {
+                "label": app_name,
+                "graph": factory().to_dict(),
+                "arch": arch.to_dict(),
+                "ilp_budget_s": ilp_s,
+            }
+        )
+        overrides.append(
+            {
+                "match": {"problem": app_name},
+                "set": {
+                    "explorer_params": {
+                        "generations": gens, "population": pop, "offspring": off,
+                    }
+                },
+            }
+        )
+        if not with_ilp:
+            overrides.append(
+                {"match": {"problem": app_name, "decoder": "ilp"}, "skip": True}
+            )
+    return Campaign(
+        name="paper-matrix",
+        problems=problems,
+        axes={"strategy": list(STRATEGIES), "decoder": ["caps_hms", "ilp"]},
+        explorer="nsga2",
+        explorer_params={"seed": 11, "time_budget_s": 240},
+        overrides=overrides,
+        # Per-cell wall times feed the Table-2 heuristic-vs-ILP speedups:
+        # keep every cell cold-cache comparable.
+        share_engines=False,
+    )
+
+
+def _fold_paper_report(report_dict):
+    """Campaign report → the historical results dict
+    {app: {hv, times, fronts}} keyed by 'Strategy^decoder' tags."""
+    results = {}
+    for app_name, grp in report_dict["groups"].items():
+        hv, times, fronts = {}, {}, {}
+        for tag in grp["cells"]:
+            row = report_dict["cells"][tag]
+            short = f"{row['coords']['strategy']}^{row['coords']['decoder']}"
+            hv[short] = grp["rel_hv"][tag]
+            times[short] = row["wall_s"]
+            fronts[short] = [list(p) for p in row["front"]]
+        results[app_name] = {"hv": hv, "times": times, "fronts": fronts}
+    return results
+
+
+def _report_paper_rows(report, results, *, cached=False):
+    note = " (cached)" if cached else ""
+    for app_name, res in results.items():
+        for tag, v in sorted(res["hv"].items()):
             report.add(f"fig8.{app_name}.{tag}", value=f"relHV={v:.3f}",
-                       derived=f"wall={times[tag]:.1f}s")
-        # Table-2 style speedup (same strategy, heuristic vs ilp)
-        if with_ilp:
-            for strategy in STRATEGIES:
-                h = times[f"{strategy}^caps_hms"]
-                i = times[f"{strategy}^ilp"]
-                report.add(
-                    f"table2.{app_name}.{strategy}",
-                    value=f"speedup={i / max(h, 1e-9):.1f}x",
-                    derived=f"ilp={i:.1f}s caps={h:.1f}s",
-                )
-        # key paper claims at this scale
+                       derived=f"wall={res['times'][tag]:.1f}s{note}")
+        hv = res["hv"]
         exp = hv.get("MRB_Explore^caps_hms", 0.0)
         ref = hv.get("Reference^caps_hms", 0.0)
         report.add(
@@ -120,7 +122,46 @@ def run(report, out_dir="runs/dse"):
             value=f"explore={exp:.3f} reference={ref:.3f}",
             derived=f"explore_wins={exp >= ref}",
         )
-    with open(os.path.join(out_dir, "dse_results.json"), "w") as f:
+        for strategy in STRATEGIES:
+            h = res["times"].get(f"{strategy}^caps_hms")
+            i = res["times"].get(f"{strategy}^ilp")
+            if h and i:
+                report.add(
+                    f"table2.{app_name}.{strategy}",
+                    value=f"speedup={i / max(h, 1e-9):.1f}x",
+                    derived=f"ilp={i:.1f}s caps={h:.1f}s{note}",
+                )
+
+
+def run(report, out_dir="runs/dse"):
+    """Runs the six-approach DSE matrix through the campaign runner.  The
+    RunStore under ``<out_dir>/campaigns/`` makes re-runs incremental
+    (completed cells are skipped); the legacy ``dse_results.json`` replay
+    is kept for stores produced before the campaign API.  Set
+    REPRO_DSE_FRESH=1 to force a full recompute — it ignores the replay
+    file *and* wipes the matrix's campaign store, so every wall time is
+    re-measured in this session (the full matrix is ~40 min on this
+    container)."""
+    fresh = bool(os.environ.get("REPRO_DSE_FRESH"))
+    cached = os.path.join(out_dir, "dse_results.json")
+    if os.path.exists(cached) and not fresh:
+        with open(cached) as f:
+            results = json.load(f)
+        _report_paper_rows(report, results, cached=True)
+        return results
+    os.makedirs(out_dir, exist_ok=True)
+    campaign = paper_matrix_campaign()
+    runner = CampaignRunner(campaign, root=os.path.join(out_dir, "campaigns"))
+    if fresh and runner.store.root and os.path.isdir(runner.store.root):
+        # "Fresh" must mean fresh timings, not a resume: drop the store so
+        # the Table-2 walls are all measured now, cold-cache.
+        import shutil
+
+        shutil.rmtree(runner.store.root)
+    res = runner.run()
+    results = _fold_paper_report(res.report)
+    _report_paper_rows(report, results)
+    with open(cached, "w") as f:
         json.dump(results, f, indent=2)
     return results
 
@@ -144,49 +185,63 @@ PARALLEL_DECODE_ACTORS = 12
 DEFAULT_PARALLEL_WORKERS = 2
 
 
-def _scaling_cell(payload):
-    """One (scenario × tier) cell of the scaling sweep — module-level so
-    the per-scenario process pool can pickle it.  Reconstructs the
-    scenario from its JSON spec and returns the result row."""
-    from repro.scenarios import scenario_from_json
+def scaling_campaign(
+    *,
+    families=None,
+    per_family: int = 3,
+    seed: int = 0,
+    n_workers: int = 0,
+    size: str = "standard",
+):
+    """The E5 sweep as a campaign: one problem per (family × tier) scenario,
+    a Reference-vs-MRB_Explore strategy axis, per-problem MOEA budgets and
+    decode-worker counts as overrides.  Returns ``(campaign, meta)`` where
+    ``meta[label]`` records the tier / sizes for the report rows."""
+    from repro.scenarios import FAMILIES, sample_scenarios
 
-    (key, sc_json, tier, gens, pop, off, seed, n_workers, size) = payload
-    sc = scenario_from_json(sc_json)
-    problem = ExplorationProblem.from_scenario(sc)
-    g = problem.graph
-    workers = max(n_workers, 0)
-    if n_workers == 0 and len(g.actors) >= PARALLEL_DECODE_ACTORS:
-        workers = DEFAULT_PARALLEL_WORKERS
-    explorer = NSGA2Explorer(
-        population=pop, offspring=off, generations=gens, seed=seed
+    fams = list(families or sorted(FAMILIES))
+    problems, overrides, meta = [], [], {}
+    for fam in fams:
+        scenarios = sample_scenarios(seed=seed, n=per_family, families=[fam], size=size)
+        for tier_i, sc in enumerate(scenarios):
+            tier = list(BUDGET_TIERS)[tier_i % len(BUDGET_TIERS)]
+            gens, pop, off = BUDGET_TIERS[tier]
+            label = f"{fam}/{tier_i}:{sc.app.seed}"
+            g, _ = sc.build()
+            workers = max(n_workers, 0)
+            if n_workers == 0 and len(g.actors) >= PARALLEL_DECODE_ACTORS:
+                workers = DEFAULT_PARALLEL_WORKERS
+            problems.append({"label": label, "scenario": sc.to_json()})
+            overrides.append(
+                {
+                    "match": {"problem": label},
+                    "set": {
+                        "explorer_params": {
+                            "generations": gens, "population": pop, "offspring": off,
+                        },
+                        "engine": {"n_workers": workers},
+                    },
+                }
+            )
+            meta[label] = {
+                "tier": tier,
+                "size_tier": size,
+                "n_workers": workers,
+                "size": {"A": len(g.actors), "C": len(g.channels)},
+                "scenario": sc.to_json(),
+            }
+    campaign = Campaign(
+        name=f"scaling-{size}-s{seed}",
+        problems=problems,
+        axes={"strategy": ["Reference", "MRB_Explore"]},
+        explorer="nsga2",
+        explorer_params={"seed": seed},
+        overrides=overrides,
+        # Both strategies of a scenario share one engine (the historical
+        # run_scaling behavior): forced-ξ fibers decode once per pair.
+        share_engines=True,
     )
-    engine = problem.make_engine(n_workers=workers)
-    fronts, times = {}, {}
-    with engine:
-        for strategy in ("Reference", "MRB_Explore"):
-            problem.strategy = strategy
-            t0 = time.monotonic()
-            res = explorer.explore(problem, engine=engine)
-            times[strategy] = time.monotonic() - t0
-            fronts[strategy] = res.front
-        stats = engine.stats()
-    union = nondominated([p for f in fronts.values() for p in f])
-    hv = {s: relative_hypervolume(f, union) for s, f in fronts.items()}
-    row = {
-        "scenario": sc_json,
-        "tier": tier,
-        "size_tier": size,
-        "n_workers": workers,
-        "size": {"A": len(g.actors), "C": len(g.channels)},
-        "hv": hv,
-        # Strategies share one engine: Reference runs cold,
-        # MRB_Explore warm-starts on its cache — times are not a
-        # strategy-cost comparison (use isolated engines for that).
-        "times": times,
-        "times_note": "shared engine; second strategy warm-starts",
-        "engine": stats,
-    }
-    return key, row
+    return campaign, meta
 
 
 def run_scaling(
@@ -200,27 +255,27 @@ def run_scaling(
     size: str = "standard",
     out_dir: str = "runs/dse",
 ):
-    """Reference vs MRB_Explore on generated scenarios, per family.
+    """Reference vs MRB_Explore on generated scenarios, per family —
+    a :class:`repro.core.Campaign` under the shared runner.
 
-    Each scenario shares one :class:`EvaluationEngine` across both strategy
-    runs, so the forced-ξ fibers are decoded once for the whole pair.
-    ``size`` selects the scenario tier (``large`` draws Multicamera-scale
-    graphs); on Multicamera-sized graphs (≥ ``PARALLEL_DECODE_ACTORS``
-    actors) the engine defaults to ``DEFAULT_PARALLEL_WORKERS`` decode
-    workers when ``n_workers`` is left at 0 — pass ``n_workers < 0`` to
-    force serial decoding everywhere.
+    Each scenario's strategy pair shares one :class:`EvaluationEngine`
+    (the runner's engine-sharing groups), so the forced-ξ fibers are
+    decoded once for the whole pair.  ``size`` selects the scenario tier
+    (``large`` draws Multicamera-scale graphs); on Multicamera-sized
+    graphs (≥ ``PARALLEL_DECODE_ACTORS`` actors) the engine defaults to
+    ``DEFAULT_PARALLEL_WORKERS`` decode workers when ``n_workers`` is left
+    at 0 — pass ``n_workers < 0`` to force serial decoding everywhere.
 
-    ``jobs`` distributes the sweep itself per-scenario across processes
-    (ROADMAP open item): 0 picks the default — serial on the standard
-    tier, ``os.cpu_count() // 2`` on the large tier, where per-scenario
-    wall time dominates; with ``jobs > 1`` the in-engine decode pool
-    defaults to serial so the two pool levels don't oversubscribe.
-    Results are merged in deterministic scenario order, so the output is
-    identical to a serial run.  Writes ``runs/dse/scaling_results.json``;
-    rows go to ``report`` when given (benchmarks.run harness) or stdout
-    otherwise.
+    ``jobs`` distributes the engine-sharing groups across processes: 0
+    picks the default — serial on the standard tier, ``os.cpu_count() //
+    2`` on the large tier, where per-scenario wall time dominates; with
+    ``jobs > 1`` the in-engine decode pool defaults to serial so the two
+    pool levels don't oversubscribe.  Cell artifacts land in a RunStore
+    under ``<out_dir>/campaigns/`` (kill/:mod:`repro.cli` ``campaign
+    resume``-able); fronts are independent of ``jobs``.  Writes
+    ``runs/dse/scaling_results.json``; rows go to ``report`` when given
+    (benchmarks.run harness) or stdout otherwise.
     """
-    from repro.scenarios import FAMILIES, sample_scenarios
 
     class _Print:
         def add(self, name, value, derived=""):
@@ -228,29 +283,54 @@ def run_scaling(
 
     report = report or _Print()
     os.makedirs(out_dir, exist_ok=True)
-    fams = list(families or sorted(FAMILIES))
     if jobs <= 0:
         jobs = max(1, (os.cpu_count() or 2) // 2) if size == "large" else 1
-    cell_workers = n_workers if jobs <= 1 else (n_workers or -1)
-    payloads = []
-    for fam in fams:
-        scenarios = sample_scenarios(seed=seed, n=per_family, families=[fam], size=size)
-        for tier_i, sc in enumerate(scenarios):
-            tier = list(BUDGET_TIERS)[tier_i % len(BUDGET_TIERS)]
-            gens, pop, off = BUDGET_TIERS[tier]
-            key = f"{fam}/{tier_i}:{sc.app.seed}"
-            payloads.append(
-                (key, sc.to_json(), tier, gens, pop, off, seed, cell_workers, size)
-            )
+    # The campaign spec is independent of --jobs (so a killed sweep resumes
+    # under any --jobs); the jobs>1 in-engine serial-decode default is a
+    # runner-level execution override, outside the cells and their hashes.
+    campaign, meta = scaling_campaign(
+        families=families, per_family=per_family, seed=seed,
+        n_workers=n_workers, size=size,
+    )
+    engine_overrides = None
     if jobs > 1:
-        from concurrent.futures import ProcessPoolExecutor
+        engine_overrides = {"n_workers": n_workers if n_workers > 0 else -1}
+    runner = CampaignRunner(
+        campaign, root=os.path.join(out_dir, "campaigns"), jobs=jobs,
+        engine_overrides=engine_overrides,
+    )
+    res = runner.run()
 
-        with ProcessPoolExecutor(max_workers=jobs) as pool:
-            rows = list(pool.map(_scaling_cell, payloads))
-    else:
-        rows = [_scaling_cell(p) for p in payloads]
-    results = dict(rows)
-    for key, row in rows:
+    results = {}
+    for label, grp in res.report["groups"].items():
+        hv, times, stats = {}, {}, {"hits": 0, "misses": 0, "evaluations": 0}
+        for tag in grp["cells"]:
+            row = res.report["cells"][tag]
+            strategy = row["coords"]["strategy"]
+            hv[strategy] = grp["rel_hv"][tag]
+            times[strategy] = row["wall_s"]
+            stats["hits"] += row["cache_hits"]
+            stats["misses"] += row.get("cache_misses", 0)
+            stats["evaluations"] += row["evaluations"]
+        row_meta = dict(meta[label])
+        if engine_overrides is not None:
+            # Provenance: record the decode-worker count the cells actually
+            # ran with (the runner-level override), not the spec default.
+            row_meta["n_workers"] = max(engine_overrides["n_workers"], 0)
+        results[label] = {
+            **row_meta,
+            "hv": hv,
+            # Strategies share one engine group: Reference runs cold,
+            # MRB_Explore warm-starts on its cache — times are not a
+            # strategy-cost comparison (use share_engines=False for that).
+            "times": times,
+            "times_note": "shared engine; second strategy warm-starts",
+            "engine": stats,
+        }
+    # Deterministic expansion order for the report rows.
+    ordered = [c.coords["problem"] for c in campaign.expand()]
+    for key in dict.fromkeys(ordered):
+        row = results[key]
         hv = row["hv"]
         report.add(
             f"fig9gen.{key}",
@@ -287,7 +367,7 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--jobs", type=int, default=0,
-        help="per-scenario sweep processes; 0: auto (serial on standard, "
+        help="campaign cell-group processes; 0: auto (serial on standard, "
              "cpu_count//2 on the large tier)",
     )
     ap.add_argument("--size", choices=("standard", "large"), default="standard")

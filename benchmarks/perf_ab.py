@@ -95,7 +95,11 @@ def show(tag, r):
 def dse_cache_ab(repeats: int = 5):
     """A/B the memoized evaluation engine on the Sobel benchmark config
     (SCALE['Sobel']: 30 generations, population 24, offspring 10, seed 11,
-    all three strategies, via ExplorationProblem + NSGA2Explorer).  Arms:
+    all three strategies).  Each arm is a 3-cell :class:`repro.core.Campaign`
+    (the strategy axis) executed by the shared CampaignRunner into an
+    in-memory RunStore, so every repeat re-executes every cell and the
+    sweep logic is the production campaign path, not a hand-rolled loop.
+    Arms differ only in the campaign's engine kwargs:
 
       no_memo   no decode memoization, no ξ-transform cache
       seed      the pre-engine run_dse: exact-genotype memoization only
@@ -104,12 +108,13 @@ def dse_cache_ab(repeats: int = 5):
     Pareto fronts must be bit-identical across all arms — the engine
     changes wall time only.  Arms are interleaved and the per-arm minimum
     reported: shared-container wall-clock noise swamps sequential medians.
-    Writes BENCH_dse.json at the repo root so the perf trajectory is
-    machine-readable across PRs.
+    BENCH_dse.json keeps a ``history`` list — every run appends the
+    previous head — so the bench trajectory across PRs is inspectable,
+    and the run *fails* (CI slow job) when an engine speedup drops below
+    the last recorded value by more than 20% (set REPRO_BENCH_NO_GATE=1
+    to bypass).
     """
-    import time as _time
-
-    from repro.core import ExplorationProblem, NSGA2Explorer, paper_architecture, sobel
+    from repro.core import Campaign, CampaignRunner, RunStore, paper_architecture, sobel
 
     g, arch = sobel(), paper_architecture()
     arms = {
@@ -118,22 +123,37 @@ def dse_cache_ab(repeats: int = 5):
         "engine": dict(cache_mode="canonical", transform_cache=64),
     }
     strategies = ("Reference", "MRB_Always", "MRB_Explore")
-    # track_hypervolume=False: the timed arms measure decode/cache work,
-    # not hypervolume post-processing (matches the pre-redesign baseline).
-    explorer = NSGA2Explorer(population=24, offspring=10, generations=30,
-                             seed=11, track_hypervolume=False)
+
+    def arm_campaign(arm):
+        # track_hypervolume=False: the timed arms measure decode/cache
+        # work, not hypervolume post-processing; share_engines=False keeps
+        # every strategy cell cold-cache (the historical per-strategy
+        # fresh-engine loop).
+        return Campaign(
+            name=f"dse-cache-{arm}",
+            problems=[{"label": "Sobel", "graph": g.to_dict(), "arch": arch.to_dict()}],
+            axes={"strategy": list(strategies)},
+            explorer="nsga2",
+            explorer_params={"population": 24, "offspring": 10, "generations": 30,
+                             "seed": 11, "track_hypervolume": False},
+            engine=arms[arm],
+            share_engines=False,
+        )
+
+    campaigns = {arm: arm_campaign(arm) for arm in arms}
+    tags = {arm: [c.tag for c in campaigns[arm].expand()] for arm in arms}
 
     def run_arm(arm):
-        fronts, decodes, hits = [], 0, 0
-        t0 = _time.monotonic()
-        for strategy in strategies:
-            problem = ExplorationProblem(graph=g, arch=arch, strategy=strategy)
-            with problem.make_engine(**arms[arm]) as eng:
-                run = explorer.explore(problem, engine=eng)
-            fronts.append(run.front)
-            decodes += run.evaluations
-            hits += run.cache_hits
-        return _time.monotonic() - t0, fronts, decodes, hits
+        res = CampaignRunner(campaigns[arm], store=RunStore(None)).run()
+        # Arm wall = Σ per-cell exploration wall (the explorers' own
+        # clocks), so the runner's report/hypervolume post-processing
+        # stays out of the timed window — matching track_hypervolume=False
+        # and the pre-campaign baseline.
+        wall = sum(res.cells[t]["wall_s"] for t in tags[arm])
+        fronts = [res.front(t) for t in tags[arm]]
+        decodes = sum(res.cells[t]["evaluations"] for t in tags[arm])
+        hits = sum(res.cells[t]["cache_hits"] for t in tags[arm])
+        return wall, fronts, decodes, hits
 
     run_arm("no_memo")  # warm-up
     walls = {a: [] for a in arms}
@@ -166,18 +186,57 @@ def dse_cache_ab(repeats: int = 5):
     )
     print("fronts bit-identical across all arms: OK")
 
+    speedups = {
+        "engine_vs_no_memo": results["no_memo"]["wall_s"] / results["engine"]["wall_s"],
+        "engine_vs_seed": results["seed"]["wall_s"] / results["engine"]["wall_s"],
+    }
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_dse.json")
+    prev = None
+    try:
+        with open(bench_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        pass
+    prev_speedups = None
+    if prev:
+        # Pre-history files carried only the flat speedup_* keys.
+        prev_speedups = prev.get("speedups") or {
+            k: prev.get(f"speedup_{k}") for k in speedups
+        }
+    history = list(prev.get("history", [])) if prev else []
+    if prev:
+        history.append(
+            {
+                "arms": prev.get("arms"),
+                "speedups": prev_speedups,
+                "fronts_identical": prev.get("fronts_identical"),
+            }
+        )
     bench = {
         "experiment": "dse_cache",
         "config": {"population": 24, "offspring": 10, "generations": 30,
-                   "seed": 11, "strategies": list(strategies)},
+                   "seed": 11, "strategies": list(strategies),
+                   "driver": "campaign"},
         "arms": results,
-        "speedup_engine_vs_no_memo":
-            results["no_memo"]["wall_s"] / results["engine"]["wall_s"],
-        "speedup_engine_vs_seed":
-            results["seed"]["wall_s"] / results["engine"]["wall_s"],
+        "speedups": speedups,
+        # Legacy keys kept for readers of the pre-history schema.
+        "speedup_engine_vs_no_memo": speedups["engine_vs_no_memo"],
+        "speedup_engine_vs_seed": speedups["engine_vs_seed"],
         "fronts_identical": fronts_identical,
+        "history": history[-24:],
     }
-    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_dse.json")
+    # Regression gate (CI slow job): each engine speedup must stay within
+    # 20% of its last recorded value.  Checked before the write so a
+    # regressed run never replaces the baseline it failed against.
+    if prev and not os.environ.get("REPRO_BENCH_NO_GATE"):
+        for name, s in speedups.items():
+            last_s = prev_speedups.get(name)
+            if last_s and s < 0.8 * last_s:
+                raise SystemExit(
+                    f"dse_cache regression: {name} speedup {s:.2f}x dropped "
+                    f">20% below last recorded {last_s:.2f}x "
+                    f"(BENCH_dse.json left unchanged)"
+                )
     with open(bench_path, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
         f.write("\n")

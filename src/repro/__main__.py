@@ -1,0 +1,6 @@
+"""``python -m repro`` — unified repro CLI (see :mod:`repro.cli`)."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

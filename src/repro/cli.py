@@ -1,0 +1,301 @@
+"""`python -m repro` — the one entrypoint for launching, resuming and
+inspecting experiments (see README "Campaign API").
+
+    python -m repro campaign run SPEC.json [--jobs N] [--root DIR]
+    python -m repro campaign resume ID_OR_DIR [--jobs N] [--root DIR]
+    python -m repro campaign report ID_OR_DIR [--root DIR]
+    python -m repro campaign list [--root DIR]
+    python -m repro problem validate SPEC.json
+    python -m repro problem explore SPEC.json [--explorer nsga2]
+                                    [--params '{"generations": 8, ...}']
+    python -m repro sim info
+    python -m repro sim parity [--family stencil_chain] [--batch 8] [--seed 0]
+
+Campaign specs are :class:`repro.core.campaign.Campaign` JSON; the store
+layout under ``--root`` (default ``runs/campaigns/``) is documented in
+:mod:`repro.core.runstore`.  ``resume``/``report`` accept either a
+campaign id (directory name under the root) or a path to a store
+directory, and reconstruct the campaign from its manifest — the spec file
+is not needed again.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from .core.campaign import (
+    Campaign,
+    CampaignRunner,
+    DEFAULT_CAMPAIGN_ROOT,
+    build_report,
+)
+from .core.runstore import MANIFEST, RunStore, list_campaign_dirs
+
+__all__ = ["main"]
+
+
+# ------------------------------------------------------------------ helpers
+def _resolve_store_dir(id_or_dir: str, root: str) -> str:
+    if os.path.isfile(os.path.join(id_or_dir, MANIFEST)):
+        return id_or_dir
+    candidate = os.path.join(root, id_or_dir)
+    if os.path.isfile(os.path.join(candidate, MANIFEST)):
+        return candidate
+    raise SystemExit(
+        f"no campaign manifest under {id_or_dir!r} or {candidate!r} "
+        f"(run `python -m repro campaign list --root {root}`)"
+    )
+
+
+def _load_campaign_from_store(store_dir: str) -> Campaign:
+    manifest = RunStore(store_dir).read_manifest()
+    if manifest is None:
+        raise SystemExit(f"unreadable manifest in {store_dir!r}")
+    return Campaign.from_json(manifest["campaign"])
+
+
+def _print_report_summary(report: dict) -> None:
+    print(f"cells: {report['n_completed']}/{report['n_cells']} completed")
+    for label, grp in sorted(report["groups"].items()):
+        print(f"  group {label}: union front {len(grp['union_front'])} pts")
+        for tag, hv in sorted(grp["rel_hv"].items()):
+            wall = report["cells"][tag]["wall_s"]
+            print(f"    {tag:48s} relHV={hv:.3f} wall={wall:.1f}s")
+    for backend, agg in sorted(report["backend_timing"].items()):
+        print(
+            f"  backend {backend}: {agg['cells']} cells "
+            f"mean={agg['wall_s_mean']:.2f}s total={agg['wall_s_total']:.2f}s"
+        )
+    if report["missing"]:
+        print(f"  missing: {', '.join(report['missing'])}")
+
+
+# ----------------------------------------------------------------- campaign
+def _cmd_campaign_run(args) -> int:
+    campaign = Campaign.load(args.spec)
+    runner = CampaignRunner(campaign, root=args.root, jobs=args.jobs)
+    result = runner.run()
+    print(
+        f"campaign {campaign.campaign_id()}: "
+        f"{len(result.executed)} cells executed, "
+        f"{len(result.skipped)} resumed from store, "
+        f"wall={result.wall_s:.1f}s"
+    )
+    print(f"store: {runner.store.root}")
+    _print_report_summary(result.report)
+    return 0
+
+
+def _cmd_campaign_resume(args) -> int:
+    store_dir = _resolve_store_dir(args.id, args.root)
+    campaign = _load_campaign_from_store(store_dir)
+    runner = CampaignRunner(
+        campaign, store=RunStore(store_dir), jobs=args.jobs
+    )
+    result = runner.run()
+    print(
+        f"campaign {campaign.campaign_id()}: "
+        f"{len(result.executed)} cells executed, "
+        f"{len(result.skipped)} already complete"
+    )
+    _print_report_summary(result.report)
+    return 0
+
+
+def _cmd_campaign_report(args) -> int:
+    store_dir = _resolve_store_dir(args.id, args.root)
+    campaign = _load_campaign_from_store(store_dir)
+    store = RunStore(store_dir)
+    report = build_report(campaign.expand(), store)
+    store.write_report(report)
+    print(f"report: {os.path.join(store_dir, 'report.json')}")
+    _print_report_summary(report)
+    return 0
+
+
+def _cmd_campaign_list(args) -> int:
+    dirs = list_campaign_dirs(args.root)
+    if not dirs:
+        print(f"no campaigns under {args.root}")
+        return 0
+    for d in dirs:
+        store = RunStore(d)
+        manifest = store.read_manifest()
+        if manifest is None:
+            continue
+        total = len(manifest.get("cells", []))
+        done = len(store.completed())
+        print(
+            f"{os.path.basename(d):48s} "
+            f"{manifest['campaign'].get('name', '?'):24s} {done}/{total} cells"
+        )
+    return 0
+
+
+# ------------------------------------------------------------------ problem
+def _cmd_problem_validate(args) -> int:
+    import hashlib
+
+    from .core.problem import ExplorationProblem
+    from .core.runstore import canonical_json
+
+    with open(args.spec) as f:
+        d = json.load(f)
+    problem = ExplorationProblem.from_json(d)
+    rt = ExplorationProblem.from_json(problem.to_json())
+    ok = rt.to_json() == problem.to_json()
+    digest = hashlib.sha256(canonical_json(problem.to_json()).encode()).hexdigest()
+    print(f"problem: {problem.name}")
+    print(f"objectives: {', '.join(problem.objectives)}")
+    print(f"actors={len(problem.graph.actors)} channels={len(problem.graph.channels)} "
+          f"cores={len(problem.arch.cores)}")
+    print(f"canonical hash: {digest}")
+    print(f"round-trip: {'OK' if ok else 'MISMATCH'}")
+    return 0 if ok else 1
+
+
+def _cmd_problem_explore(args) -> int:
+    from .core.explorers import get_explorer
+    from .core.problem import ExplorationProblem
+
+    with open(args.spec) as f:
+        problem = ExplorationProblem.from_json(json.load(f))
+    params = json.loads(args.params) if args.params else {}
+    explorer = get_explorer(args.explorer, **params)
+    run = explorer.explore(problem)
+    path = run.save(out_dir=args.out)
+    print(
+        f"{problem.name}: front={len(run.front)} pts "
+        f"decodes={run.evaluations} wall={run.wall_s:.1f}s"
+    )
+    for p in run.front:
+        print("  " + " ".join(f"{v:g}" for v in p))
+    print(f"saved -> {path}")
+    return 0
+
+
+# ---------------------------------------------------------------------- sim
+def _cmd_sim_info(args) -> int:
+    from . import sim
+    from .core.engine import (
+        AUTO_CPU_MAX_TASKS,
+        AUTO_MIN_BATCH,
+        SIM_BACKENDS,
+        _jax_platform,
+    )
+
+    print(f"simulation enabled: {sim.simulation_enabled()}")
+    print(f"engine sim_backend values: {SIM_BACKENDS}")
+    print(f"batched backends: {sim.BATCH_BACKENDS}")
+    print(f"jax platform: {_jax_platform()}")
+    print(
+        f"auto selection: events below batch {AUTO_MIN_BATCH}; on CPU, "
+        f"pallas up to {AUTO_CPU_MAX_TASKS} tasks, vectorized beyond; "
+        f"pallas on TPU; vectorized elsewhere"
+    )
+    return 0
+
+
+def _cmd_sim_parity(args) -> int:
+    """Tiny doctor command: decode a seeded batch on a generated scenario
+    and assert all three backends measure identical periods."""
+    import random
+    import time
+
+    from .core.dse import GenotypeSpace, evaluate_genotype
+    from .core.problem import ExplorationProblem
+    from .scenarios import sample_scenarios
+    from .sim import SimConfig, batch_simulate_periods, simulate_period
+
+    sc = sample_scenarios(seed=args.seed, n=1, families=[args.family])[0]
+    problem = ExplorationProblem.from_scenario(sc, strategy="MRB_Always")
+    space = GenotypeSpace(problem.graph, problem.arch)
+    rng = random.Random(args.seed)
+    scheds = []
+    tries = 0
+    while len(scheds) < args.batch and tries < args.batch * 50:
+        tries += 1
+        ind = evaluate_genotype(space, space.force_xi(space.random(rng), 1))
+        if ind.feasible and ind.schedule is not None:
+            scheds.append(ind.schedule)
+    if not scheds:
+        raise SystemExit(f"no feasible phenotypes drawn for {sc.name}")
+    from .core.dse import transformed_graph
+
+    gt = transformed_graph(space, tuple(1 for _ in space.mcast), True)
+    cfg = SimConfig(trace=False)
+    timings = {}
+    t0 = time.monotonic()
+    ev = [simulate_period(gt, problem.arch, s, cfg) for s in scheds]
+    timings["events"] = time.monotonic() - t0
+    periods = {"events": ev}
+    for backend in ("vectorized", "pallas"):
+        t0 = time.monotonic()
+        periods[backend] = batch_simulate_periods(
+            gt, problem.arch, scheds, cfg, backend=backend
+        )
+        timings[backend] = time.monotonic() - t0
+    ok = periods["events"] == periods["vectorized"] == periods["pallas"]
+    print(f"scenario {sc.name}: {len(scheds)} phenotypes")
+    for backend, wall in timings.items():
+        print(f"  {backend:12s} wall={wall:.3f}s")
+    print(f"periods identical across backends: {'OK' if ok else 'DIVERGED'}")
+    return 0 if ok else 1
+
+
+# --------------------------------------------------------------------- main
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    camp = sub.add_parser("campaign", help="declarative multi-problem DSE sweeps")
+    csub = camp.add_subparsers(dest="action", required=True)
+    p = csub.add_parser("run", help="execute a campaign spec (resumes a matching store)")
+    p.add_argument("spec", help="Campaign JSON file")
+    p.add_argument("--jobs", type=int, default=1, help="process-pool width over cell groups")
+    p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
+    p.set_defaults(fn=_cmd_campaign_run)
+    p = csub.add_parser("resume", help="finish a killed campaign from its store")
+    p.add_argument("id", help="campaign id under --root, or a store directory path")
+    p.add_argument("--jobs", type=int, default=1)
+    p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
+    p.set_defaults(fn=_cmd_campaign_resume)
+    p = csub.add_parser("report", help="rebuild and print the cross-cell report")
+    p.add_argument("id")
+    p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
+    p.set_defaults(fn=_cmd_campaign_report)
+    p = csub.add_parser("list", help="list campaign stores")
+    p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
+    p.set_defaults(fn=_cmd_campaign_list)
+
+    prob = sub.add_parser("problem", help="single ExplorationProblem utilities")
+    psub = prob.add_subparsers(dest="action", required=True)
+    p = psub.add_parser("validate", help="round-trip + canonical-hash a problem spec")
+    p.add_argument("spec")
+    p.set_defaults(fn=_cmd_problem_validate)
+    p = psub.add_parser("explore", help="run one exploration, save the run JSON")
+    p.add_argument("spec")
+    p.add_argument("--explorer", default="nsga2")
+    p.add_argument("--params", default="", help="explorer kwargs as JSON")
+    p.add_argument("--out", default="runs")
+    p.set_defaults(fn=_cmd_problem_explore)
+
+    simp = sub.add_parser("sim", help="simulator utilities")
+    ssub = simp.add_subparsers(dest="action", required=True)
+    p = ssub.add_parser("info", help="backends, platform, auto-selection thresholds")
+    p.set_defaults(fn=_cmd_sim_info)
+    p = ssub.add_parser("parity", help="assert backend parity on a seeded batch")
+    p.add_argument("--family", default="stencil_chain")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.set_defaults(fn=_cmd_sim_parity)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

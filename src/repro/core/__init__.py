@@ -33,7 +33,21 @@ from .dse import (
     run_dse,
     xi_mode,
 )
-from .engine import CACHE_MODES, EvaluationEngine, decode_key
+from .campaign import (
+    Campaign,
+    CampaignCell,
+    CampaignResult,
+    CampaignRunner,
+    build_report,
+)
+from .engine import (
+    CACHE_MODES,
+    SIM_BACKENDS,
+    EvaluationEngine,
+    decode_key,
+    resolve_sim_backend,
+)
+from .runstore import RunStore, canonical_json
 from .explorers import (
     EXPLORERS,
     ExplorationRun,

@@ -56,7 +56,13 @@ from .dse import (
 )
 from .problem import Objective, resolve_objectives
 
-__all__ = ["EvaluationEngine", "decode_key", "CACHE_MODES", "SIM_BACKENDS"]
+__all__ = [
+    "EvaluationEngine",
+    "decode_key",
+    "resolve_sim_backend",
+    "CACHE_MODES",
+    "SIM_BACKENDS",
+]
 
 CACHE_MODES = ("canonical", "exact", "none")
 
@@ -69,9 +75,70 @@ CACHE_MODES = ("canonical", "exact", "none")
 #                    device call;
 #   "pallas"         deferred like "vectorized", through the Pallas
 #                    actor-step kernel (repro.kernels.sim_step; interpreter
-#                    mode off-TPU).  All routes yield identical values
-#                    (enforced backend parity).
-SIM_BACKENDS = (None, "events", "vectorized", "pallas")
+#                    mode off-TPU);
+#   "auto"           deferred; each ξ-group picks events ↔ vectorized ↔
+#                    pallas from the JAX platform, the group's batch size,
+#                    and the structure size (resolve_sim_backend); choices
+#                    are counted in ``engine.sim_backend_choices`` and
+#                    surfaced in ``ExplorationRun.meta``.
+# All routes yield identical values (enforced backend parity).
+SIM_BACKENDS = (None, "auto", "events", "vectorized", "pallas")
+
+# "auto" thresholds.  Below AUTO_MIN_BATCH the compiled batched paths can't
+# amortize dispatch over the group, so the event-driven loop wins.  On CPU
+# the Pallas kernel runs in interpreter mode — fastest at population-sized
+# batches of small graphs (BENCH_sim.json), but its per-element round loop
+# scales with the task-table size, so structures past AUTO_CPU_MAX_TASKS
+# route to the fused-rounds lax backend instead.
+AUTO_MIN_BATCH = 4
+AUTO_CPU_MAX_TASKS = 256
+
+
+def _jax_platform() -> str:
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:  # jax missing/misconfigured: events always works
+        return "none"
+
+
+def _task_count(graph) -> int:
+    """Structure-size proxy: segments in the simulator's task table (one
+    read per in-channel, one write per out-channel, one execute per actor)."""
+    return sum(
+        len(graph.in_channels(a)) + len(graph.out_channels(a)) + 1
+        for a in graph.actors
+    )
+
+
+def resolve_sim_backend(
+    batch_size: int, n_tasks: int, platform: Optional[str] = None
+) -> str:
+    """Concrete backend for one ξ-group under ``sim_backend="auto"``.
+
+    Regimes (each unit-tested in ``tests/test_engine.py``):
+
+    * tiny groups (< ``AUTO_MIN_BATCH``) → ``events``: per-phenotype loops
+      beat compiled-batch dispatch;
+    * TPU → ``pallas``: the actor-step kernel keeps state on-chip;
+    * CPU, small structures (≤ ``AUTO_CPU_MAX_TASKS`` tasks) → ``pallas``
+      (interpreter mode; fastest batch path at population sizes);
+    * CPU, large structures → ``vectorized`` (fused one-hot rounds scale
+      with dense task tables where the interpreted kernel can't);
+    * anything else (GPU, unknown, no JAX) → ``vectorized`` as the
+      portable lax path — or ``events`` when JAX is unavailable.
+    """
+    plat = platform if platform is not None else _jax_platform()
+    if plat == "none":
+        return "events"
+    if batch_size < AUTO_MIN_BATCH:
+        return "events"
+    if plat == "tpu":
+        return "pallas"
+    if plat == "cpu":
+        return "pallas" if n_tasks <= AUTO_CPU_MAX_TASKS else "vectorized"
+    return "vectorized"
 
 
 def _analytic_period_placeholder(ctx) -> float:
@@ -207,8 +274,11 @@ class EvaluationEngine:
         # every route (the inline objective can only use the default
         # config).
         self._sim_defer = "sim_period" in self.objective_names and (
-            sim_backend in ("vectorized", "pallas") or sim_config is not None
+            sim_backend in ("auto", "vectorized", "pallas") or sim_config is not None
         )
+        # "auto" resolution counts, per concrete backend chosen (one count
+        # per ξ-group patch) — surfaced in ExplorationRun.meta.
+        self.sim_backend_choices: Dict[str, int] = {}
         self._decode_objs = tuple(
             _SIM_PERIOD_DEFERRED if (self._sim_defer and o.name == "sim_period") else o
             for o in self.objectives
@@ -311,10 +381,16 @@ class EvaluationEngine:
         out = list(inds)
         for xi, idxs in groups.items():
             gt = self._transformed(xi)
-            if self.sim_backend in ("vectorized", "pallas"):
+            backend = self.sim_backend
+            if backend == "auto":
+                backend = resolve_sim_backend(len(idxs), _task_count(gt))
+                self.sim_backend_choices[backend] = (
+                    self.sim_backend_choices.get(backend, 0) + 1
+                )
+            if backend in ("vectorized", "pallas"):
                 periods = batch_simulate_periods(
                     gt, self.space.arch, [inds[i].schedule for i in idxs],
-                    self.sim_config, backend=self.sim_backend,
+                    self.sim_config, backend=backend,
                 )
             else:
                 periods = [

@@ -73,6 +73,9 @@ class ExplorationRun:
     cache_hits: int = 0
     cache_misses: int = 0
     wall_s: float = 0.0
+    # Free-form provenance (serialized): e.g. the engine's sim_backend and,
+    # under sim_backend="auto", the per-ξ-group concrete backend choices.
+    meta: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def front(self) -> List[Objectives]:
@@ -101,6 +104,7 @@ class ExplorationRun:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "wall_s": self.wall_s,
+            "meta": dict(self.meta),
             "front": [list(p) for p in self.front],  # derived, for readers
         }
 
@@ -156,6 +160,7 @@ class ExplorationRun:
             cache_hits=d.get("cache_hits", 0),
             cache_misses=d.get("cache_misses", 0),
             wall_s=d.get("wall_s", 0.0),
+            meta=dict(d.get("meta", {})),
         )
 
     @classmethod
@@ -272,6 +277,20 @@ def _finalize_hypervolume(run: ExplorationRun) -> None:
     ]
 
 
+def _record_engine_meta(run: ExplorationRun, engine, choices0: Dict[str, int]) -> None:
+    """Provenance: which sim backend evaluated this run.  Under
+    ``sim_backend="auto"`` the per-ξ-group concrete choices made *during
+    this run* (the engine may be shared, so deltas against ``choices0``)."""
+    run.meta["sim_backend"] = engine.sim_backend
+    if engine.sim_backend == "auto":
+        delta = {
+            k: v - choices0.get(k, 0)
+            for k, v in engine.sim_backend_choices.items()
+            if v - choices0.get(k, 0) > 0
+        }
+        run.meta["sim_backend_choices"] = delta
+
+
 # ==========================================================================
 @register_explorer("nsga2")
 class NSGA2Explorer:
@@ -333,6 +352,7 @@ class NSGA2Explorer:
         # between explores, and the run's provenance must not drift.
         run = ExplorationRun(replace(problem), self.name, self.params())
         ev0, hit0, miss0 = engine.evaluations, engine.hits, engine.misses
+        choices0 = dict(engine.sim_backend_choices)
 
         try:
             fix = _xi_fixer(space, mode)
@@ -393,6 +413,7 @@ class NSGA2Explorer:
             run.evaluations = engine.evaluations - ev0
             run.cache_hits = engine.hits - hit0
             run.cache_misses = engine.misses - miss0
+            _record_engine_meta(run, engine, choices0)
         finally:
             if own_engine:
                 engine.close()
@@ -455,6 +476,7 @@ class RandomSearchExplorer:
         # Snapshot: see NSGA2Explorer.explore.
         run = ExplorationRun(replace(problem), self.name, self.params())
         ev0, hit0, miss0 = engine.evaluations, engine.hits, engine.misses
+        choices0 = dict(engine.sim_backend_choices)
         fix = _xi_fixer(space, mode)
 
         try:
@@ -478,6 +500,7 @@ class RandomSearchExplorer:
             run.evaluations = engine.evaluations - ev0
             run.cache_hits = engine.hits - hit0
             run.cache_misses = engine.misses - miss0
+            _record_engine_meta(run, engine, choices0)
         finally:
             if own_engine:
                 engine.close()

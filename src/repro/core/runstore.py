@@ -1,0 +1,160 @@
+"""Content-addressed, resumable artifact store for campaign cells.
+
+A :class:`RunStore` holds the results of one campaign under
+``runs/campaigns/<campaign_id>/``:
+
+* ``manifest.json`` — the campaign spec plus its full ordered cell list
+  (tags + canonical spec hashes).  The manifest is *deterministic*: it
+  contains no timestamps or wall times, so an interrupted-then-resumed
+  campaign produces a byte-identical manifest to an uninterrupted one.
+* ``cells/<spec_hash>.json`` — one artifact per completed cell (the cell
+  spec + its serialized :class:`~repro.core.explorers.ExplorationRun`),
+  written atomically (temp file + ``os.replace``) so a killed campaign
+  never leaves a torn artifact; whatever is present is trustworthy, which
+  is exactly what makes ``campaign resume`` free.
+* ``report.json`` — the cross-cell report (fronts, relative-hypervolume
+  table, per-backend timing); derived data, regenerate at will.
+
+``RunStore(None)`` keeps everything in memory — used by A/B benchmarks
+and tests that must re-execute every cell on every repeat.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional
+
+__all__ = ["RunStore", "canonical_json", "list_campaign_dirs"]
+
+MANIFEST = "manifest.json"
+REPORT = "report.json"
+CELL_DIR = "cells"
+
+
+def canonical_json(d: Any) -> str:
+    """One canonical text per JSON value: sorted keys, no whitespace.
+    Spec hashes and manifests are built over this form, so dict ordering
+    never leaks into identities."""
+    return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+
+def _atomic_write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(path) or ".", prefix=os.path.basename(path) + ".tmp."
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        # mkstemp files are 0600; give artifacts the ordinary open()
+        # permissions so a store survives uid changes (CI caches, shared
+        # machines).
+        umask = os.umask(0)
+        os.umask(umask)
+        os.chmod(tmp, 0o666 & ~umask)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+class RunStore:
+    """Per-campaign artifact store; ``root=None`` is an in-memory store."""
+
+    def __init__(self, root: Optional[str]) -> None:
+        self.root = root
+        self._mem: Dict[str, str] = {}  # in-memory mode: name -> text
+
+    # ----------------------------------------------------------------- paths
+    def cell_path(self, spec_hash: str) -> str:
+        return os.path.join(self.root or "", CELL_DIR, f"{spec_hash}.json")
+
+    def _read(self, name: str) -> Optional[str]:
+        if self.root is None:
+            return self._mem.get(name)
+        path = os.path.join(self.root, name)
+        try:
+            with open(path) as f:
+                return f.read()
+        except OSError:
+            return None
+
+    def _write(self, name: str, text: str) -> str:
+        if self.root is None:
+            self._mem[name] = text
+            return name
+        path = os.path.join(self.root, name)
+        _atomic_write(path, text)
+        return path
+
+    # ----------------------------------------------------------------- cells
+    def has_cell(self, spec_hash: str) -> bool:
+        return self._read(os.path.join(CELL_DIR, f"{spec_hash}.json")) is not None
+
+    def completed(self) -> List[str]:
+        """Spec hashes of every completed cell artifact, sorted."""
+        if self.root is None:
+            return sorted(
+                os.path.basename(n)[: -len(".json")]
+                for n in self._mem
+                if n.startswith(CELL_DIR + os.sep) and n.endswith(".json")
+            )
+        d = os.path.join(self.root, CELL_DIR)
+        try:
+            names = os.listdir(d)
+        except OSError:
+            return []
+        return sorted(n[: -len(".json")] for n in names if n.endswith(".json"))
+
+    def save_cell(self, spec_hash: str, payload: Dict[str, Any]) -> str:
+        return self._write(
+            os.path.join(CELL_DIR, f"{spec_hash}.json"),
+            json.dumps(payload, sort_keys=True),
+        )
+
+    def load_cell(self, spec_hash: str) -> Dict[str, Any]:
+        text = self._read(os.path.join(CELL_DIR, f"{spec_hash}.json"))
+        if text is None:
+            raise KeyError(f"no cell artifact for {spec_hash}")
+        return json.loads(text)
+
+    def delete_cell(self, spec_hash: str) -> None:
+        if self.root is None:
+            self._mem.pop(os.path.join(CELL_DIR, f"{spec_hash}.json"), None)
+        else:
+            try:
+                os.unlink(self.cell_path(spec_hash))
+            except OSError:
+                pass
+
+    # ------------------------------------------------------ manifest / report
+    def write_manifest(self, manifest: Dict[str, Any]) -> str:
+        return self._write(MANIFEST, canonical_json(manifest) + "\n")
+
+    def read_manifest(self) -> Optional[Dict[str, Any]]:
+        text = self._read(MANIFEST)
+        return None if text is None else json.loads(text)
+
+    def write_report(self, report: Dict[str, Any]) -> str:
+        return self._write(REPORT, json.dumps(report, sort_keys=True, indent=2) + "\n")
+
+    def read_report(self) -> Optional[Dict[str, Any]]:
+        text = self._read(REPORT)
+        return None if text is None else json.loads(text)
+
+
+def list_campaign_dirs(root: str) -> List[str]:
+    """Campaign store directories (those holding a manifest) under ``root``."""
+    try:
+        names = sorted(os.listdir(root))
+    except OSError:
+        return []
+    return [
+        os.path.join(root, n)
+        for n in names
+        if os.path.isfile(os.path.join(root, n, MANIFEST))
+    ]

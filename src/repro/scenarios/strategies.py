@@ -51,14 +51,17 @@ PARAM_RANGES: Dict[str, Dict[str, Sequence[Any]]] = {
 # "large" tier: Multicamera-scale graphs (tens of actors, ~100 channels)
 # where decode dominates the sweep and process-parallel evaluation pays
 # off (ROADMAP open item; used by dse_experiments.run_scaling --size).
+# Grown one notch in PR 5 (each range's ceiling raised ~25-50%) now the
+# campaign runner distributes the sweep; run_scaling --size large is
+# verified to complete under it.
 LARGE_PARAM_RANGES: Dict[str, Dict[str, Sequence[Any]]] = {
-    "multicast_tree": {"depth": (2, 3), "fanout": (3, 4)},
-    "split_join": {"branches": (4, 6, 8), "stages": (2, 3), "fork_prob": (0.5, 1.0)},
-    "stencil_chain": {"length": (4, 6, 8), "taps": (3, 4)},
-    "camera_pipeline": {"cameras": (3, 4), "chain": (4, 5, 6), "tap_width": (2,)},
+    "multicast_tree": {"depth": (2, 3, 4), "fanout": (3, 4, 5)},
+    "split_join": {"branches": (4, 6, 8, 10), "stages": (2, 3, 4), "fork_prob": (0.5, 1.0)},
+    "stencil_chain": {"length": (4, 6, 8, 10), "taps": (3, 4, 5)},
+    "camera_pipeline": {"cameras": (3, 4, 5), "chain": (4, 5, 6, 7), "tap_width": (2,)},
     "random_dag": {
-        "n_actors": (16, 24, 32),
-        "width": (3, 4, 5),
+        "n_actors": (16, 24, 32, 40),
+        "width": (3, 4, 5, 6),
         "multicast_density": (0.4, 0.7, 1.0),
     },
 }
@@ -78,9 +81,10 @@ ARCH_RANGES: Dict[str, Sequence[Any]] = {
 }
 
 # Larger targets to pair with "large" graphs (more tiles/cores so big
-# graphs stay schedulable without saturating one crossbar).
+# graphs stay schedulable without saturating one crossbar; tiles grown
+# one notch with the PR-5 family-param bump).
 LARGE_ARCH_RANGES: Dict[str, Sequence[Any]] = {
-    "tiles": (3, 4, 6),
+    "tiles": (3, 4, 6, 8),
     "cores_per_tile": (4, 6),
     "type_mix": TYPE_MIXES,
     "noc_profile": tuple(NOC_PROFILES),

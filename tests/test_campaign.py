@@ -1,0 +1,345 @@
+"""Campaign API: spec round-trip, spec-hash stability, expansion rules,
+runner-vs-direct front identity, kill/resume, and the `python -m repro`
+CLI surface."""
+import copy
+import json
+import os
+
+import pytest
+
+from repro.cli import main as cli_main
+from repro.core import (
+    Campaign,
+    CampaignRunner,
+    ExplorationProblem,
+    NSGA2Explorer,
+    RunStore,
+    paper_architecture,
+    sobel,
+)
+from repro.core.campaign import CampaignCell, build_report
+from repro.scenarios import sample_scenarios
+
+TINY = {"population": 8, "offspring": 4, "generations": 2, "seed": 3}
+
+
+def tiny_campaign(**kwargs):
+    sc = sample_scenarios(seed=0, n=1, families=["stencil_chain"])[0]
+    defaults = dict(
+        name="tiny",
+        problems=[{"label": "stencil0", "scenario": sc.to_json()}],
+        axes={"strategy": ["Reference", "MRB_Explore"]},
+        explorer="nsga2",
+        explorer_params=dict(TINY),
+    )
+    defaults.update(kwargs)
+    return Campaign(**defaults)
+
+
+# ------------------------------------------------------------ spec identity
+def test_campaign_json_round_trip():
+    camp = tiny_campaign(
+        overrides=[
+            {"match": {"strategy": "Reference"},
+             "set": {"explorer_params": {"generations": 1}}},
+        ],
+        engine={"cache_mode": "canonical"},
+    )
+    rt = Campaign.from_json(json.loads(camp.dumps()))
+    assert rt.to_json() == camp.to_json()
+    assert rt.spec_hash() == camp.spec_hash()
+    assert [c.spec_hash() for c in rt.expand()] == [
+        c.spec_hash() for c in camp.expand()
+    ]
+
+
+def test_spec_hash_ignores_dict_order_and_coords():
+    camp = tiny_campaign()
+    cell = camp.expand()[0]
+    # Same semantic content, different dict insertion order.
+    shuffled = CampaignCell.from_json(
+        json.loads(json.dumps(cell.to_json(), sort_keys=True))
+    )
+    reordered = CampaignCell(
+        problem=dict(reversed(list(cell.problem.items()))),
+        explorer=cell.explorer,
+        explorer_params=dict(reversed(list(cell.explorer_params.items()))),
+        engine=cell.engine,
+        coords={},  # coords are labels, not identity
+    )
+    assert shuffled.spec_hash() == cell.spec_hash() == reordered.spec_hash()
+    # Runner knobs and campaign name are not part of cell identity either.
+    renamed = tiny_campaign(name="renamed")
+    assert [c.spec_hash() for c in renamed.expand()] == [
+        c.spec_hash() for c in camp.expand()
+    ]
+    assert renamed.campaign_id() != camp.campaign_id()  # stores stay apart
+
+
+def test_spec_hash_pinned():
+    """The canonicalization contract: a fixed spec hashes to a fixed value.
+    If this moves, every existing RunStore silently stops resuming —
+    change it deliberately or not at all."""
+    cell = CampaignCell(
+        problem={"strategy": "Reference", "decoder": "caps_hms"},
+        explorer="nsga2",
+        explorer_params={"seed": 0},
+        engine={},
+        coords={"problem": "x"},
+    )
+    assert cell.spec_hash() == (
+        "4baa4d0d2b0188853317e886452266c967369fb88d6551a791ee2836e7a9df13"
+    )
+
+
+def test_expansion_rules_override_and_skip():
+    camp = tiny_campaign(
+        axes={"strategy": ["Reference", "MRB_Explore"],
+              "decoder": ["caps_hms", "ilp"]},
+        overrides=[
+            {"match": {"decoder": "ilp"},
+             "set": {"problem": {"ilp_budget_s": 0.25},
+                     "explorer_params": {"generations": 1}}},
+            {"match": {"strategy": "Reference", "decoder": "ilp"}, "skip": True},
+        ],
+    )
+    cells = camp.expand()
+    assert len(cells) == 3  # 2x2 minus the skipped Reference^ilp
+    by_coords = {(c.coords["strategy"], c.coords["decoder"]): c for c in cells}
+    assert ("Reference", "ilp") not in by_coords
+    ilp = by_coords[("MRB_Explore", "ilp")]
+    assert ilp.problem["ilp_budget_s"] == 0.25
+    assert ilp.explorer_params["generations"] == 1
+    assert by_coords[("Reference", "caps_hms")].explorer_params["generations"] == 2
+
+
+def test_duplicate_cells_rejected():
+    camp = tiny_campaign()
+    camp.problems = camp.problems * 2  # identical templates -> identical cells
+    with pytest.raises(ValueError, match="duplicate"):
+        CampaignRunner(camp, store=RunStore(None))
+
+
+def test_distinct_cells_with_colliding_tags_rejected():
+    """Two different scenarios behind one label expand to distinct hashes
+    but identical tags — the report would silently drop one."""
+    scs = sample_scenarios(seed=0, n=2, families=["stencil_chain"])
+    camp = tiny_campaign(
+        problems=[{"label": "same", "scenario": sc.to_json()} for sc in scs],
+    )
+    with pytest.raises(ValueError, match="identical tags"):
+        CampaignRunner(camp, store=RunStore(None))
+
+
+def test_typoed_override_match_key_rejected():
+    with pytest.raises(ValueError, match="unknown coordinates"):
+        tiny_campaign(overrides=[{"match": {"decoders": "ilp"}, "skip": True}])
+
+
+def test_typoed_override_set_section_rejected():
+    with pytest.raises(ValueError, match="unknown sections"):
+        tiny_campaign(
+            overrides=[{"match": {"strategy": "Reference"},
+                        "set": {"params": {"generations": 1}}}],
+        )
+
+
+def test_empty_axis_rejected():
+    with pytest.raises(ValueError, match="no values"):
+        tiny_campaign(axes={"strategy": []})
+
+
+def test_perf_only_engine_knobs_transparent_to_hashes():
+    """n_workers changes neither cell hashes nor the campaign id — a
+    killed sweep resumes under a different worker/jobs setting."""
+    serial = tiny_campaign(engine={"n_workers": 0})
+    parallel = tiny_campaign(engine={"n_workers": 2})
+    assert serial.campaign_id() == parallel.campaign_id()
+    assert [c.spec_hash() for c in serial.expand()] == [
+        c.spec_hash() for c in parallel.expand()
+    ]
+    # ...but a result-affecting engine kwarg does change identity.
+    exact = tiny_campaign(engine={"cache_mode": "exact"})
+    assert exact.campaign_id() != serial.campaign_id()
+    # Runner-level execution overrides accept only perf-only knobs.
+    with pytest.raises(ValueError, match="perf-only"):
+        CampaignRunner(
+            serial, store=RunStore(None), engine_overrides={"cache_mode": "none"}
+        )
+    res = CampaignRunner(
+        serial, store=RunStore(None), engine_overrides={"n_workers": -1}
+    ).run()
+    direct = CampaignRunner(parallel, store=RunStore(None)).run()
+    for tag in res.cells:
+        assert res.front(tag) == direct.front(tag)
+
+
+# --------------------------------------------------------- runner semantics
+def test_runner_fronts_bit_identical_to_direct_explorer():
+    camp = tiny_campaign()
+    result = CampaignRunner(camp, store=RunStore(None)).run()
+    sc = sample_scenarios(seed=0, n=1, families=["stencil_chain"])[0]
+    for cell in camp.expand():
+        problem = ExplorationProblem.from_scenario(
+            sc, strategy=cell.coords["strategy"]
+        )
+        direct = NSGA2Explorer(**TINY).explore(problem)
+        assert sorted(direct.front) == sorted(result.front(cell.tag)), cell.tag
+
+
+def test_kill_resume_and_manifest_identity(tmp_path):
+    camp = tiny_campaign()
+    store_dir = str(tmp_path / "store")
+    res1 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    assert len(res1.executed) == 2 and not res1.skipped
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        manifest_uninterrupted = f.read()
+
+    # Simulate a killed campaign: one cell artifact missing.
+    victim = camp.expand()[1]
+    store = RunStore(store_dir)
+    store.delete_cell(victim.spec_hash())
+    assert not store.has_cell(victim.spec_hash())
+
+    res2 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    assert res2.executed == [victim.spec_hash()]  # only the missing cell
+    assert sorted(res2.skipped) == sorted(
+        c.spec_hash()
+        for c in camp.expand()
+        if c.spec_hash() != victim.spec_hash()
+    )
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        assert f.read() == manifest_uninterrupted
+    # Identical report content (wall times aside) — fronts must match.
+    for cell in camp.expand():
+        assert res2.front(cell.tag) == res1.front(cell.tag)
+
+
+def test_report_groups_split_by_objective_layout():
+    camp = tiny_campaign(
+        overrides=[
+            {"match": {"strategy": "MRB_Explore"},
+             "set": {"problem": {"objectives": [
+                 "period", "memory", "core_cost", "comm_volume"]}}},
+        ],
+    )
+    result = CampaignRunner(camp, store=RunStore(None)).run()
+    # 3- and 4-objective cells are not hypervolume-comparable: two groups,
+    # every cell accounted for.
+    assert len(result.report["groups"]) == 2
+    covered = [t for g in result.report["groups"].values() for t in g["cells"]]
+    assert sorted(covered) == sorted(result.report["cells"])
+
+
+def test_engine_sharing_matches_isolated_fronts():
+    shared = CampaignRunner(tiny_campaign(), store=RunStore(None)).run()
+    isolated = CampaignRunner(
+        tiny_campaign(share_engines=False), store=RunStore(None)
+    ).run()
+    for tag in shared.cells:
+        assert shared.front(tag) == isolated.front(tag)
+
+
+def test_run_meta_round_trips_through_store():
+    camp = tiny_campaign()
+    result = CampaignRunner(camp, store=RunStore(None)).run()
+    for row in result.cells.values():
+        assert "sim_backend" in row["meta"]  # provenance recorded per cell
+
+
+# ----------------------------------------------------------------- CLI seam
+def test_cli_campaign_run_resume_report_list(tmp_path, capsys):
+    spec = tmp_path / "spec.json"
+    camp = tiny_campaign()
+    spec.write_text(camp.dumps())
+    root = str(tmp_path / "campaigns")
+
+    assert cli_main(["campaign", "run", str(spec), "--root", root]) == 0
+    out = capsys.readouterr().out
+    assert "2 cells executed" in out
+    store_dir = os.path.join(root, camp.campaign_id())
+    assert os.path.isfile(os.path.join(store_dir, "manifest.json"))
+    assert os.path.isfile(os.path.join(store_dir, "report.json"))
+
+    # resume by id, without the spec file
+    assert cli_main(["campaign", "resume", camp.campaign_id(), "--root", root]) == 0
+    assert "0 cells executed" in capsys.readouterr().out
+    assert cli_main(["campaign", "report", camp.campaign_id(), "--root", root]) == 0
+    assert "relHV" in capsys.readouterr().out
+    assert cli_main(["campaign", "list", "--root", root]) == 0
+    assert "2/2 cells" in capsys.readouterr().out
+
+
+def test_cli_problem_validate_and_explore(tmp_path, capsys):
+    sc = sample_scenarios(seed=0, n=1, families=["split_join"])[0]
+    problem = ExplorationProblem.from_scenario(sc)
+    spec = tmp_path / "problem.json"
+    spec.write_text(json.dumps(problem.to_json()))
+    assert cli_main(["problem", "validate", str(spec)]) == 0
+    assert "round-trip: OK" in capsys.readouterr().out
+    assert cli_main([
+        "problem", "explore", str(spec),
+        "--params", json.dumps(TINY), "--out", str(tmp_path / "runs"),
+    ]) == 0
+    assert "front=" in capsys.readouterr().out
+
+
+def test_cli_sim_info(capsys):
+    assert cli_main(["sim", "info"]) == 0
+    assert "batched backends" in capsys.readouterr().out
+
+
+# ------------------------------------------------- acceptance (slow) matrix
+@pytest.mark.slow
+def test_acceptance_matrix_cli_vs_direct(tmp_path, capsys):
+    """The ISSUE-5 acceptance cell: a seeded 2-problem x 2-decoder x
+    2-sim-backend campaign through `python -m repro campaign run` produces
+    bit-identical fronts to direct explorer invocations, and deleting one
+    cell artifact re-executes exactly that cell (manifest identical)."""
+    sc = sample_scenarios(seed=1, n=1, families=["multicast_tree"])[0]
+    g, arch = sobel(), paper_architecture()
+    params = {"population": 6, "offspring": 3, "generations": 1, "seed": 5}
+    camp = Campaign(
+        name="acceptance",
+        problems=[
+            {"label": "Sobel", "graph": g.to_dict(), "arch": arch.to_dict(),
+             "objectives": ["sim_period", "memory", "core_cost"],
+             "ilp_budget_s": 0.5},
+            {"label": "mtree", "scenario": sc.to_json(),
+             "objectives": ["sim_period", "memory", "core_cost"],
+             "ilp_budget_s": 0.5},
+        ],
+        axes={"decoder": ["caps_hms", "ilp"],
+              "sim_backend": ["events", "vectorized"]},
+        explorer="nsga2",
+        explorer_params=params,
+    )
+    spec = tmp_path / "acceptance.json"
+    spec.write_text(camp.dumps())
+    root = str(tmp_path / "campaigns")
+    assert cli_main(["campaign", "run", str(spec), "--root", root]) == 0
+    capsys.readouterr()
+    store_dir = os.path.join(root, camp.campaign_id())
+    store = RunStore(store_dir)
+    report = store.read_report()
+    assert report["n_completed"] == 8
+
+    # Bit-identical to the equivalent direct invocations (backend parity
+    # makes the sim_backend arm value-transparent).
+    for cell in camp.expand():
+        problem = ExplorationProblem.from_json(copy.deepcopy(cell.problem))
+        direct = NSGA2Explorer(**params).explore(
+            problem, engine=problem.make_engine(**cell.engine)
+        )
+        got = [tuple(p) for p in report["cells"][cell.tag]["front"]]
+        assert sorted(direct.front) == sorted(got), cell.tag
+
+    # Resume proof by manifest diff.
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        manifest_before = f.read()
+    victim = camp.expand()[3]
+    store.delete_cell(victim.spec_hash())
+    res = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    assert res.executed == [victim.spec_hash()]
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        assert f.read() == manifest_before
