@@ -3,13 +3,16 @@ inspecting experiments (see README "Campaign API").
 
     python -m repro campaign run SPEC.json [--jobs N] [--root DIR]
     python -m repro campaign resume ID_OR_DIR [--jobs N] [--root DIR]
-    python -m repro campaign report ID_OR_DIR [--root DIR]
+    python -m repro campaign report ID_OR_DIR [--root DIR] [--verify]
     python -m repro campaign list [--root DIR]
     python -m repro problem validate SPEC.json
     python -m repro problem explore SPEC.json [--explorer nsga2]
                                     [--params '{"generations": 8, ...}']
     python -m repro sim info
     python -m repro sim parity [--family stencil_chain] [--batch 8] [--seed 0]
+    python -m repro sim verify [--families a,b] [--sizes standard] [--decoders ...]
+                               [--per-family 1] [--samples 3] [--seed 0]
+                               [--harmonic] [--out report.json]
 
 Campaign specs are :class:`repro.core.campaign.Campaign` JSON; the store
 layout under ``--root`` (default ``runs/campaigns/``) is documented in
@@ -109,10 +112,24 @@ def _cmd_campaign_report(args) -> int:
     store_dir = _resolve_store_dir(args.id, args.root)
     campaign = _load_campaign_from_store(store_dir)
     store = RunStore(store_dir)
-    report = build_report(campaign.expand(), store)
+    report = build_report(
+        campaign.expand(), store,
+        verify=args.verify, verify_limit=args.verify_limit,
+    )
     store.write_report(report)
     print(f"report: {os.path.join(store_dir, 'report.json')}")
     _print_report_summary(report)
+    if args.verify:
+        bad = 0
+        for tag, row in sorted(report["cells"].items()):
+            v = row.get("verify") or {}
+            flag = "OK" if v.get("ok", True) else "VIOLATED"
+            bad += 0 if v.get("ok", True) else 1
+            print(
+                f"  verify {tag:48s} checked={v.get('checked', 0)} "
+                f"violations={v.get('violations', 0)} {flag}"
+            )
+        return 0 if bad == 0 else 1
     return 0
 
 
@@ -246,6 +263,45 @@ def _cmd_sim_parity(args) -> int:
     return 0 if ok else 1
 
 
+def _cmd_sim_verify(args) -> int:
+    """Decoder conformance sweep: decode random genotypes per scenario and
+    run every feasible schedule through the independent verifier; exit 1 on
+    any violation (see README "Schedule verification")."""
+    from .verify import differential_sweep
+
+    families = [f for f in (args.families or "").split(",") if f] or None
+    sizes = tuple(s for s in args.sizes.split(",") if s)
+    decoders = tuple(d for d in args.decoders.split(",") if d)
+    report = differential_sweep(
+        seed=args.seed,
+        families=families,
+        sizes=sizes,
+        per_family=args.per_family,
+        samples=args.samples,
+        decoders=decoders,
+        ilp_budget_s=args.ilp_budget_s,
+        harmonic=args.harmonic,
+    )
+    for row in report["rows"]:
+        flag = "OK" if row["n_violations"] == 0 else "VIOLATED"
+        print(
+            f"  {row['scenario']:40s} {row['decoder']:10s} "
+            f"checked={row['checked']} feasible={row['feasible']} "
+            f"violations={row['n_violations']} {flag}"
+        )
+    print(
+        f"sweep: {report['n_checked']} schedules checked, "
+        f"{report['n_violations']} violations -> "
+        f"{'OK' if report['ok'] else 'FAILED'}"
+    )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"report -> {args.out}")
+    return 0 if report["ok"] else 1
+
+
 # --------------------------------------------------------------------- main
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="repro", description=__doc__)
@@ -266,6 +322,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = csub.add_parser("report", help="rebuild and print the cross-cell report")
     p.add_argument("id")
     p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
+    p.add_argument("--verify", action="store_true",
+                   help="re-decode archived genotypes through the schedule verifier")
+    p.add_argument("--verify-limit", type=int, default=3, dest="verify_limit",
+                   help="archived genotypes re-checked per cell")
     p.set_defaults(fn=_cmd_campaign_report)
     p = csub.add_parser("list", help="list campaign stores")
     p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
@@ -292,6 +352,20 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     p.set_defaults(fn=_cmd_sim_parity)
+    p = ssub.add_parser(
+        "verify", help="decoder conformance sweep through the schedule verifier"
+    )
+    p.add_argument("--families", default="", help="comma list; default: all")
+    p.add_argument("--sizes", default="standard", help="comma list of size tiers")
+    p.add_argument("--decoders", default="caps_hms,ilp", help="comma list")
+    p.add_argument("--per-family", type=int, default=1, dest="per_family")
+    p.add_argument("--samples", type=int, default=3, help="genotypes per scenario")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ilp-budget-s", type=float, default=1.0, dest="ilp_budget_s")
+    p.add_argument("--harmonic", action="store_true",
+                   help="harmonize scenarios (pow2 times, uniform tokens)")
+    p.add_argument("--out", default="", help="write the JSON report here")
+    p.set_defaults(fn=_cmd_sim_verify)
 
     args = ap.parse_args(argv)
     return args.fn(args)

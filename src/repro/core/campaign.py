@@ -457,12 +457,54 @@ def _run_shard(payload) -> List[str]:
 
 
 # ==========================================================================
+def _verify_cell(cell: "CampaignCell", run: Dict[str, Any], limit: int) -> Dict[str, Any]:
+    """Re-decode up to ``limit`` archived genotypes with the cell's own
+    decoder and run each feasible schedule through the independent verifier
+    (README "Schedule verification")."""
+    from .dse import Genotype, GenotypeSpace, evaluate_genotype, transformed_graph
+    from .problem import ExplorationProblem
+    from ..verify import verify_schedule  # function-level: keeps core import-light
+
+    problem = ExplorationProblem.from_json(cell.problem)
+    space = GenotypeSpace(problem.graph, problem.arch)
+    checked = 0
+    violations = 0
+    kinds: set = set()
+    for entry in run.get("archive", [])[: max(0, limit)]:
+        gd = entry.get("genotype") or {}
+        geno = Genotype(tuple(gd["xi"]), tuple(gd["cd"]), tuple(gd["ba"]))
+        ind = evaluate_genotype(
+            space, geno,
+            decoder=problem.decoder,
+            ilp_budget_s=problem.ilp_budget_s,
+            pipelined=problem.pipelined,
+        )
+        if not ind.feasible or ind.schedule is None:
+            continue
+        gt = transformed_graph(space, geno.xi, problem.pipelined)
+        report = verify_schedule(gt, problem.arch, ind.schedule)
+        checked += 1
+        violations += len(report.violations)
+        kinds |= report.kinds()
+    return {
+        "checked": checked,
+        "violations": violations,
+        "kinds": sorted(kinds),
+        "ok": violations == 0,
+    }
+
+
 def build_report(
-    cells: Sequence[CampaignCell], store: RunStore
+    cells: Sequence[CampaignCell], store: RunStore,
+    *, verify: bool = False, verify_limit: int = 3,
 ) -> Dict[str, Any]:
     """Cross-cell report over whatever artifacts the store holds: per-cell
     fronts and counters, relative hypervolume against each problem group's
-    union front, and per-sim-backend timing aggregates."""
+    union front, and per-sim-backend timing aggregates.
+
+    With ``verify=True`` each completed cell also gets a ``verify`` column:
+    up to ``verify_limit`` archived genotypes are re-decoded and checked by
+    :func:`repro.verify.verify_schedule` (zero expected violations)."""
     rows: Dict[str, Dict[str, Any]] = {}
     groups: Dict[Tuple[str, str], List[str]] = {}
     missing: List[str] = []
@@ -486,6 +528,7 @@ def build_report(
             "cache_misses": run.get("cache_misses", 0),
             "wall_s": run.get("wall_s", 0.0),
             "meta": run.get("meta", {}),
+            "verify": _verify_cell(cell, run, verify_limit) if verify else None,
         }
         groups.setdefault(cell.group_key(), []).append(cell.tag)
 

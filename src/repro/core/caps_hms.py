@@ -59,6 +59,25 @@ class DecodeResult:
     def period(self) -> float:
         return self.schedule.period if self.schedule else math.inf
 
+    def to_json(self) -> Dict:
+        """JSON form; infeasible results serialize with ``schedule: null``
+        so ``period`` is ``math.inf`` again after ``from_json`` (the inf
+        never has to survive JSON itself)."""
+        return {
+            "schedule": self.schedule.to_json() if self.schedule else None,
+            "feasible": self.feasible,
+            "periods_tried": self.periods_tried,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "DecodeResult":
+        sched = d.get("schedule")
+        return cls(
+            schedule=Schedule.from_json(sched) if sched else None,
+            feasible=bool(d["feasible"]),
+            periods_tried=d.get("periods_tried", 0),
+        )
+
 
 def _advance_past(period: int, s_abs: int, offset: int, busy_end: int) -> int:
     """Smallest s' > s_abs such that phase(s' + offset) == busy_end, i.e. the

@@ -145,3 +145,27 @@ def _decode_ilp(
         g, arch, decisions, actor_binding,
         time_budget_s=3.0 if time_budget_s is None else time_budget_s,
     )
+
+
+# Optional: CP-SAT exact decoder, registered only when ortools is importable
+# (extras flag "cpsat"); the module itself imports cleanly without it.
+from .cpsat import HAVE_ORTOOLS as _HAVE_ORTOOLS  # noqa: E402
+
+if _HAVE_ORTOOLS:  # pragma: no cover - ortools absent in the offline image
+    from .cpsat import decode_via_cpsat
+
+    @register_decoder("cpsat")
+    def _decode_cpsat(
+        g: ApplicationGraph,
+        arch: ArchitectureGraph,
+        decisions: Dict[str, str],
+        actor_binding: Dict[str, str],
+        *,
+        time_budget_s: Optional[float] = None,
+    ) -> object:
+        """CP-SAT exact modulo scheduler (same constraint system as "ilp",
+        solved by OR-Tools); anytime under ``time_budget_s``."""
+        return decode_via_cpsat(
+            g, arch, decisions, actor_binding,
+            time_budget_s=3.0 if time_budget_s is None else time_budget_s,
+        )

@@ -62,28 +62,53 @@ class ExactResult:
         # strictly worse than any feasible period (see DecodeResult.period).
         return self.schedule.period if self.schedule else math.inf
 
+    def to_json(self) -> Dict:
+        """JSON form; ``schedule: null`` for infeasible results so the
+        ``period`` property yields ``math.inf`` again after ``from_json``."""
+        return {
+            "schedule": self.schedule.to_json() if self.schedule else None,
+            "feasible": self.feasible,
+            "proven_optimal": self.proven_optimal,
+            "periods_tried": self.periods_tried,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ExactResult":
+        sched = d.get("schedule")
+        return cls(
+            schedule=Schedule.from_json(sched) if sched else None,
+            feasible=bool(d["feasible"]),
+            proven_optimal=bool(d.get("proven_optimal", False)),
+            periods_tried=d.get("periods_tried", 0),
+        )
+
 
 class _Timeout(Exception):
     pass
 
 
-def _solve_fixed_period(
+def _window_layout(
     g: ApplicationGraph,
     arch: ArchitectureGraph,
     actor_binding: Dict[str, str],
     channel_binding: Dict[str, str],
-    period: int,
-    deadline: float,
-) -> Optional[TaskTimes]:
-    """Backtracking satisfiability search for one candidate period.
+) -> Tuple[
+    List[str],
+    Dict[str, List[Tuple[str, Tuple[str, str], int, int, List[str]]]],
+    Dict[str, Tuple[int, int, int]],
+]:
+    """Topological actor order plus the contiguous per-actor window layout
+    (reads sorted by channel, execute, writes sorted by channel) shared by
+    the backtracking search and the optional CP-SAT decoder.
 
-    Raises _Timeout when the deadline passes; returns None when refuted.
+    Returns ``(order, layout, window)`` where ``layout[a]`` is a list of
+    ``(kind, edge, offset, tau, routes)`` items and ``window[a]`` is the
+    ``(t_in, t_ex, t_out)`` phase durations.
     """
     read_tau, write_tau = comm_times(g, arch, actor_binding, channel_binding)
     prio = topological_priorities(g)
     order = sorted(g.actors, key=lambda a: (-prio[a], a))
 
-    # Precompute per-actor window layout: [(kind, edge, offset, tau, routes)]
     layout: Dict[str, List[Tuple[str, Tuple[str, str], int, int, List[str]]]] = {}
     window: Dict[str, Tuple[int, int, int]] = {}
     for a in order:
@@ -106,6 +131,22 @@ def _solve_fixed_period(
                           arch.route_interconnects(actor_binding[a], channel_binding[t[1]])))
             off += write_tau[t]
         layout[a] = items
+    return order, layout, window
+
+
+def _solve_fixed_period(
+    g: ApplicationGraph,
+    arch: ArchitectureGraph,
+    actor_binding: Dict[str, str],
+    channel_binding: Dict[str, str],
+    period: int,
+    deadline: float,
+) -> Optional[TaskTimes]:
+    """Backtracking satisfiability search for one candidate period.
+
+    Raises _Timeout when the deadline passes; returns None when refuted.
+    """
+    order, layout, window = _window_layout(g, arch, actor_binding, channel_binding)
 
     util: Dict[str, UtilizationSet] = {r: UtilizationSet() for r in arch.schedulable_resources()}
     start: Dict[str, int] = {}
@@ -239,17 +280,22 @@ def _solve_fixed_period(
     return times
 
 
-def decode_via_ilp(
+def _decode_exact(
     g: ApplicationGraph,
     arch: ArchitectureGraph,
     decisions: Dict[str, str],
     actor_binding: Dict[str, str],
+    solve_fn,
     *,
     time_budget_s: float = 3.0,
     max_period: Optional[int] = None,
     max_rebind_rounds: int = 8,
 ) -> ExactResult:
-    """Algorithm 3: exact decoding with the paper's 3 s anytime budget."""
+    """Algorithm 3's outer loop, parameterized over the fixed-period
+    satisfiability engine (backtracking search or CP-SAT): scan P upward
+    from the resource lower bound, rebind channels when the found schedule
+    overflows a memory.  ``solve_fn`` has :func:`_solve_fixed_period`'s
+    signature and raises :class:`_Timeout` past the deadline."""
     t0 = time.monotonic()
     deadline = t0 + time_budget_s
     capacities = {c: ch.capacity for c, ch in g.channels.items()}
@@ -266,7 +312,7 @@ def decode_via_ilp(
         while period <= cap:
             tried += 1
             try:
-                times = _solve_fixed_period(
+                times = solve_fn(
                     g, arch, actor_binding, beta_c, period, deadline
                 )
             except _Timeout:
@@ -295,3 +341,22 @@ def decode_via_ilp(
             return ExactResult(sched, True, proven, tried)
         beta_c = determine_channel_bindings(g, arch, decisions, new_caps, actor_binding)
     return ExactResult(None, False, False, tried)
+
+
+def decode_via_ilp(
+    g: ApplicationGraph,
+    arch: ArchitectureGraph,
+    decisions: Dict[str, str],
+    actor_binding: Dict[str, str],
+    *,
+    time_budget_s: float = 3.0,
+    max_period: Optional[int] = None,
+    max_rebind_rounds: int = 8,
+) -> ExactResult:
+    """Algorithm 3: exact decoding with the paper's 3 s anytime budget."""
+    return _decode_exact(
+        g, arch, decisions, actor_binding, _solve_fixed_period,
+        time_budget_s=time_budget_s,
+        max_period=max_period,
+        max_rebind_rounds=max_rebind_rounds,
+    )

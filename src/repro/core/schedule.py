@@ -144,6 +144,32 @@ class Schedule:
     channel_binding: Dict[str, str]
     capacities: Dict[str, int]  # possibly enlarged γ
 
+    def to_json(self) -> Dict:
+        """Plain-JSON form (edge keys become [channel, actor, start] rows)."""
+        return {
+            "period": self.period,
+            "actor_start": dict(self.times.actor_start),
+            "read_start": [[c, a, s] for (c, a), s in sorted(self.times.read_start.items())],
+            "write_start": [[a, c, s] for (a, c), s in sorted(self.times.write_start.items())],
+            "actor_binding": dict(self.actor_binding),
+            "channel_binding": dict(self.channel_binding),
+            "capacities": dict(self.capacities),
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Schedule":
+        return cls(
+            period=d["period"],
+            times=TaskTimes(
+                actor_start=dict(d["actor_start"]),
+                read_start={(c, a): s for c, a, s in d["read_start"]},
+                write_start={(a, c): s for a, c, s in d["write_start"]},
+            ),
+            actor_binding=dict(d["actor_binding"]),
+            channel_binding=dict(d["channel_binding"]),
+            capacities=dict(d["capacities"]),
+        )
+
 
 def comm_times(
     g: ApplicationGraph,

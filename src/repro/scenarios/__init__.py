@@ -2,8 +2,8 @@
 heterogeneous architectures, serializable specs, and sampling strategies for
 property-based testing and scaling sweeps (see README "Scenario subsystem")."""
 from .archs import ArchParams, NOC_PROFILES, generate_architecture
-from .families import FAMILIES, build, exec_times
-from .spec import AppSpec, Scenario, scenario_from_json, validate_scenario
+from .families import FAMILIES, build, exec_times, harmonize_graph
+from .spec import AppSpec, Scenario, harmonized, scenario_from_json, validate_scenario
 from .strategies import (
     LARGE_PARAM_RANGES,
     PARAM_RANGES,
@@ -21,8 +21,10 @@ __all__ = [
     "FAMILIES",
     "build",
     "exec_times",
+    "harmonize_graph",
     "AppSpec",
     "Scenario",
+    "harmonized",
     "scenario_from_json",
     "validate_scenario",
     "PARAM_RANGES",

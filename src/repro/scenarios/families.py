@@ -33,7 +33,7 @@ from typing import Callable, Dict, List, Optional
 
 from ..core.graph import ApplicationGraph, multicast_actors
 
-__all__ = ["FAMILIES", "TOKEN_CLASSES", "exec_times", "build"]
+__all__ = ["FAMILIES", "TOKEN_CLASSES", "exec_times", "build", "harmonize_graph"]
 
 # Byte-size classes for generated tokens: image-plane-ish magnitudes scaled
 # down so comm times stay small and decoding stays fast in tests.
@@ -298,14 +298,43 @@ FAMILIES: Dict[str, Callable[..., ApplicationGraph]] = {
 }
 
 
+def harmonize_graph(g: ApplicationGraph) -> ApplicationGraph:
+    """Quantize a graph onto the harmonic-period tier (in place).
+
+    Every execution time is rounded up to the next power of two and every
+    token shrunk to the smallest byte class, so feasible periods cluster on
+    a few harmonically related values and exact decoders (branch-and-bound,
+    CP-SAT) can close their search quickly.  Multicast structure (Eqs. 1-3)
+    is preserved: all token sizes stay equal by construction.  Available as
+    the ``harmonic: true`` param on every family (``AppSpec.make(family,
+    seed, harmonic=True)``) — off by default, so existing seeds and golden
+    values are untouched."""
+    for a in g.actors.values():
+        a.exec_times = {
+            ctype: 1 << max(0, (t - 1).bit_length()) for ctype, t in a.exec_times.items()
+        }
+    for ch in g.channels.values():
+        ch.token_bytes = TOKEN_CLASSES[0]
+    return g
+
+
 def build(family: str, seed: int, params: Optional[Dict] = None) -> ApplicationGraph:
-    """Deterministically build one application graph of ``family``."""
+    """Deterministically build one application graph of ``family``.
+
+    The cross-family param ``harmonic`` (default False) is popped before
+    dispatch and post-processes the graph via :func:`harmonize_graph` —
+    the RNG draws are identical either way, so the harmonic variant of a
+    seed has the same topology as the standard one."""
     if family not in FAMILIES:
         raise KeyError(f"unknown scenario family {family!r}; known: {sorted(FAMILIES)}")
+    p = dict(params or {})
+    harmonic = bool(p.pop("harmonic", False))
     # String seeds hash deterministically (tuple seeds go through the
     # process-salted hash() and would differ between runs).
     rng = random.Random(f"app:{family}:{seed}")
-    g = FAMILIES[family](rng, **dict(params or {}))
+    g = FAMILIES[family](rng, **p)
+    if harmonic:
+        harmonize_graph(g)
     g.validate()
     multicast_actors(g)  # raises if any flagged actor violates Eqs. (1)-(3)
     return g

@@ -19,7 +19,13 @@ from ..core.graph import ApplicationGraph
 from .archs import ArchParams, generate_architecture
 from .families import FAMILIES, build as build_app
 
-__all__ = ["AppSpec", "Scenario", "scenario_from_json", "validate_scenario"]
+__all__ = [
+    "AppSpec",
+    "Scenario",
+    "harmonized",
+    "scenario_from_json",
+    "validate_scenario",
+]
 
 
 def _freeze(params: Dict[str, Any]) -> Tuple[Tuple[str, Any], ...]:
@@ -74,6 +80,20 @@ class Scenario:
     @property
     def name(self) -> str:
         return f"{self.app.family}#{self.app.seed}@{self.arch.tiles}x{self.arch.cores_per_tile}"
+
+
+def harmonized(sc: Scenario) -> Scenario:
+    """The harmonic-period variant of a scenario: same family, seeds and
+    topology, but execution times quantized to powers of two and tokens
+    shrunk to the smallest class (``families.harmonize_graph``), so exact
+    decoders can close their period search.  Idempotent."""
+    params = dict(sc.app.params)
+    params["harmonic"] = True
+    return Scenario(
+        app=AppSpec.make(sc.app.family, sc.app.seed, **params),
+        arch=sc.arch,
+        arch_seed=sc.arch_seed,
+    )
 
 
 def scenario_from_json(d: Any) -> Scenario:

@@ -1,4 +1,105 @@
+"""Shared fixtures and helpers for the suite.
+
+The Sobel graph/architecture pair, the pipelined ξ=1 transformed Sobel,
+the random-feasible-decode helper, the 4-objective generated problem, and
+the tiny campaign factory used to be duplicated across test_engine /
+test_sim / test_explorers / test_campaign; they live here now, with their
+seeds and golden values unchanged.
+
+Plain-function variants (``make_pipelined_sobel``, ``random_decode``,
+``tiny_campaign``) exist alongside the fixtures because property tests
+(`@given`) run under repro.scenarios.proptest's hypothesis fallback, whose
+driver exposes a parameterless callable to pytest — fixture injection does
+not reach them, a module-level import does.
+"""
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core import (
+    Campaign,
+    ExplorationProblem,
+    GenotypeSpace,
+    multicast_actors,
+    paper_architecture,
+    pipeline_delays,
+    sobel,
+    substitute_mrbs,
+)
+from repro.core.binding import CHANNEL_DECISIONS
+from repro.core.caps_hms import decode_via_heuristic
+from repro.core.ilp import decode_via_ilp
+from repro.scenarios import sample_scenarios
+
+TINY = {"population": 8, "offspring": 4, "generations": 2, "seed": 3}
+
+
+# ------------------------------------------------------------ plain helpers
+def make_pipelined_sobel():
+    """Sobel with every MRB substituted (ξ=1) plus §VI pipeline delays —
+    the transformed graph most simulator tests decode and execute."""
+    g, arch = sobel(), paper_architecture()
+    gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
+    return gt, arch
+
+
+def random_decode(gt, arch, rng, decoder="caps_hms", tries=40):
+    """Draw random (β_A, C_d) pairs until one decodes feasibly."""
+    cores = sorted(arch.cores)
+    for _ in range(tries):
+        ba = {
+            a: rng.choice(
+                [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in gt.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
+        if decoder == "caps_hms":
+            res = decode_via_heuristic(gt, arch, cd, ba)
+        else:
+            res = decode_via_ilp(gt, arch, cd, ba, time_budget_s=0.5)
+        if res.feasible:
+            return res
+    raise AssertionError("no feasible decode found")
+
+
+def tiny_campaign(**kwargs):
+    """Two-strategy campaign over one seed-0 stencil_chain scenario."""
+    sc = sample_scenarios(seed=0, n=1, families=["stencil_chain"])[0]
+    defaults = dict(
+        name="tiny",
+        problems=[{"label": "stencil0", "scenario": sc.to_json()}],
+        axes={"strategy": ["Reference", "MRB_Explore"]},
+        explorer="nsga2",
+        explorer_params=dict(TINY),
+    )
+    defaults.update(kwargs)
+    return Campaign(**defaults)
+
+
+# ----------------------------------------------------------------- fixtures
+@pytest.fixture()
+def sobel_arch():
+    """A fresh (Sobel graph, paper architecture) pair per test."""
+    return sobel(), paper_architecture()
+
+
+@pytest.fixture(scope="module")
+def sobel_space():
+    return GenotypeSpace(sobel(), paper_architecture())
+
+
+@pytest.fixture()
+def pipelined_sobel():
+    return make_pipelined_sobel()
+
+
+@pytest.fixture(scope="module")
+def gen_problem4():
+    sc = sample_scenarios(seed=3, n=1, families=["stencil_chain"])[0]
+    return ExplorationProblem.from_scenario(
+        sc, objectives=("period", "memory", "core_cost", "comm_volume")
+    )

@@ -7,6 +7,7 @@ import os
 
 import pytest
 
+from conftest import TINY, tiny_campaign
 from repro.cli import main as cli_main
 from repro.core import (
     Campaign,
@@ -14,26 +15,9 @@ from repro.core import (
     ExplorationProblem,
     NSGA2Explorer,
     RunStore,
-    paper_architecture,
-    sobel,
 )
 from repro.core.campaign import CampaignCell, build_report
 from repro.scenarios import sample_scenarios
-
-TINY = {"population": 8, "offspring": 4, "generations": 2, "seed": 3}
-
-
-def tiny_campaign(**kwargs):
-    sc = sample_scenarios(seed=0, n=1, families=["stencil_chain"])[0]
-    defaults = dict(
-        name="tiny",
-        problems=[{"label": "stencil0", "scenario": sc.to_json()}],
-        axes={"strategy": ["Reference", "MRB_Explore"]},
-        explorer="nsga2",
-        explorer_params=dict(TINY),
-    )
-    defaults.update(kwargs)
-    return Campaign(**defaults)
 
 
 # ------------------------------------------------------------ spec identity
@@ -291,13 +275,13 @@ def test_cli_sim_info(capsys):
 
 # ------------------------------------------------- acceptance (slow) matrix
 @pytest.mark.slow
-def test_acceptance_matrix_cli_vs_direct(tmp_path, capsys):
+def test_acceptance_matrix_cli_vs_direct(tmp_path, capsys, sobel_arch):
     """The ISSUE-5 acceptance cell: a seeded 2-problem x 2-decoder x
     2-sim-backend campaign through `python -m repro campaign run` produces
     bit-identical fronts to direct explorer invocations, and deleting one
     cell artifact re-executes exactly that cell (manifest identical)."""
     sc = sample_scenarios(seed=1, n=1, families=["multicast_tree"])[0]
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     params = {"population": 6, "offspring": 3, "generations": 1, "seed": 5}
     camp = Campaign(
         name="acceptance",

@@ -64,6 +64,46 @@ def test_dryrun_cell_on_small_mesh():
     assert json.loads(lines[1])["decode_ok"]
 
 
+def test_infeasible_mapping_inf_period_survives_json_save_load(tmp_path):
+    """An infeasible decode (period math.inf, no schedule) must survive a
+    dry-run style save/load cycle: the serialized result has ``schedule:
+    null`` and deserializes back to an inf period that still orders last."""
+    import math
+
+    from conftest import make_pipelined_sobel
+    from repro.core.caps_hms import DecodeResult, decode_via_heuristic
+    from repro.core.ilp import ExactResult, decode_via_ilp
+
+    gt, arch = make_pipelined_sobel()
+    core = sorted(arch.cores)[0]
+    ba = {a: core for a in gt.actors}
+    cd = {c: "GLOBAL" for c in gt.channels}
+    bad = decode_via_heuristic(gt, arch, cd, ba, max_period=1)
+    bad_exact = decode_via_ilp(gt, arch, cd, ba, time_budget_s=0.5, max_period=1)
+    good = decode_via_heuristic(gt, arch, cd, ba)
+    assert not bad.feasible and not bad_exact.feasible and good.feasible
+
+    path = tmp_path / "decodes.json"
+    path.write_text(json.dumps({
+        "bad": bad.to_json(),
+        "bad_exact": bad_exact.to_json(),
+        "good": good.to_json(),
+    }))
+    loaded = json.loads(path.read_text())
+    lbad = DecodeResult.from_json(loaded["bad"])
+    lbad_exact = ExactResult.from_json(loaded["bad_exact"])
+    lgood = DecodeResult.from_json(loaded["good"])
+    assert not lbad.feasible and lbad.schedule is None
+    assert lbad.period == math.inf
+    assert not lbad_exact.feasible and not lbad_exact.proven_optimal
+    assert lbad_exact.period == math.inf
+    assert lgood.feasible and lgood.period == good.period
+    # math.inf (not a -1 sentinel): min() over periods picks the feasible one.
+    assert min([lbad, lbad_exact, lgood], key=lambda r: r.period) is lgood
+    # and the feasible schedule round-trips exactly
+    assert lgood.schedule.to_json() == good.schedule.to_json()
+
+
 def test_hlo_cost_model_scales_with_layers():
     """The loop-aware HLO cost model must multiply while bodies by trip
     count (XLA's flat cost_analysis does not — verified here)."""

@@ -2,28 +2,19 @@
 decoder parity on generated graphs, and the seed-front regression."""
 import random
 
-import pytest
-
 from repro.core import (
     DSEConfig,
     EvaluationEngine,
     GenotypeSpace,
     decode_key,
     evaluate_genotype,
-    paper_architecture,
     run_dse,
-    sobel,
 )
 from repro.core.dse import Genotype
 from repro.core.caps_hms import decode_via_heuristic
 from repro.core.ilp import decode_via_ilp
 from repro.scenarios import sample_scenario
 from repro.scenarios.proptest import given, settings, st
-
-
-@pytest.fixture(scope="module")
-def sobel_space():
-    return GenotypeSpace(sobel(), paper_architecture())
 
 
 # --------------------------------------------------------------- decode key
@@ -108,14 +99,14 @@ GOLDEN_FRONT = [
 ]
 
 
-def test_memoized_engine_reproduces_seed_front_bit_for_bit():
-    g, arch = sobel(), paper_architecture()
+def test_memoized_engine_reproduces_seed_front_bit_for_bit(sobel_arch):
+    g, arch = sobel_arch
     res = run_dse(g, arch, DSEConfig(**GOLDEN_CFG, cache_mode="canonical"))
     assert res.front == GOLDEN_FRONT
 
 
-def test_all_cache_modes_and_parallelism_agree():
-    g, arch = sobel(), paper_architecture()
+def test_all_cache_modes_and_parallelism_agree(sobel_arch):
+    g, arch = sobel_arch
     runs = {
         mode: run_dse(g, arch, DSEConfig(**GOLDEN_CFG, cache_mode=mode))
         for mode in ("none", "exact", "canonical")
@@ -129,10 +120,10 @@ def test_all_cache_modes_and_parallelism_agree():
     assert runs["canonical"].cache_hits >= runs["exact"].cache_hits
 
 
-def test_shared_engine_across_strategy_runs():
+def test_shared_engine_across_strategy_runs(sobel_arch):
     """One engine shared across strategy runs dedups forced-ξ fibers; the
     fronts stay identical to isolated runs."""
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     cfg = lambda s: DSEConfig(strategy=s, population=10, offspring=5, generations=3, seed=5)
     isolated = {s: run_dse(g, arch, cfg(s)).front for s in ("Reference", "MRB_Explore")}
     with EvaluationEngine(GenotypeSpace(g, arch)) as eng:
@@ -191,13 +182,14 @@ def test_auto_backend_resolution_regimes():
     assert resolve_sim_backend(64, small, platform="none") == "events"
 
 
-def test_auto_backend_engine_end_to_end_and_metadata():
+def test_auto_backend_engine_end_to_end_and_metadata(sobel_arch):
     """sim_backend="auto" defers sim_period, resolves per ξ-group, records
     its choices, and stays value-identical to the events route."""
     from repro.core import ExplorationProblem, NSGA2Explorer
 
+    g, arch = sobel_arch
     problem = ExplorationProblem(
-        graph=sobel(), arch=paper_architecture(),
+        graph=g, arch=arch,
         objectives=("sim_period", "memory", "core_cost"),
         strategy="MRB_Always",
     )
@@ -221,13 +213,14 @@ def test_auto_backend_engine_end_to_end_and_metadata():
     assert rt.meta == auto_run.meta
 
 
-def test_auto_backend_small_batch_routes_to_events(monkeypatch):
+def test_auto_backend_small_batch_routes_to_events(monkeypatch, sobel_arch):
     """Below AUTO_MIN_BATCH the auto engine must choose the event-driven
     loop (asserted via the recorded choice, single-genotype evaluate)."""
     from repro.core import ExplorationProblem
 
+    g, arch = sobel_arch
     problem = ExplorationProblem(
-        graph=sobel(), arch=paper_architecture(),
+        graph=g, arch=arch,
         objectives=("sim_period", "memory", "core_cost"),
         strategy="MRB_Always",
     )

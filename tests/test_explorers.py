@@ -23,11 +23,9 @@ from repro.core import (
     get_objective,
     infeasible_objectives,
     objective_names,
-    paper_architecture,
     register_objective,
     resolve_objectives,
     run_dse,
-    sobel,
 )
 from repro.scenarios import sample_scenarios
 
@@ -45,8 +43,8 @@ def test_registries_expose_builtins():
         get_explorer("tabu")
 
 
-def test_problem_validates_names():
-    g, arch = sobel(), paper_architecture()
+def test_problem_validates_names(sobel_arch):
+    g, arch = sobel_arch
     with pytest.raises(KeyError):
         ExplorationProblem(graph=g, arch=arch, objectives=("period", "nope"))
     with pytest.raises(KeyError):
@@ -57,13 +55,13 @@ def test_problem_validates_names():
         ExplorationProblem(graph=g, arch=arch, objectives=())
 
 
-def test_register_objective_plugs_into_evaluation():
+def test_register_objective_plugs_into_evaluation(sobel_space):
     @register_objective("_test_n_channels", unit="channels")
     def _n_channels(ctx: EvalContext) -> float:
         return float(len(ctx.graph.channels))
 
     try:
-        sp = GenotypeSpace(sobel(), paper_architecture())
+        sp = sobel_space
         import random
 
         ind = evaluate_genotype(
@@ -117,24 +115,24 @@ GOLDEN_FRONTS = {
 
 
 @pytest.mark.parametrize("strategy", ("Reference", "MRB_Always", "MRB_Explore"))
-def test_run_dse_bit_identical_to_pre_redesign_caps(strategy):
-    g, arch = sobel(), paper_architecture()
+def test_run_dse_bit_identical_to_pre_redesign_caps(strategy, sobel_arch):
+    g, arch = sobel_arch
     res = run_dse(g, arch, DSEConfig(strategy=strategy, decoder="caps_hms", **CAPS_CFG))
     assert res.front == GOLDEN_FRONTS[(strategy, "caps_hms")]
 
 
 @pytest.mark.slow
 @pytest.mark.parametrize("strategy", ("Reference", "MRB_Always", "MRB_Explore"))
-def test_run_dse_bit_identical_to_pre_redesign_ilp(strategy):
-    g, arch = sobel(), paper_architecture()
+def test_run_dse_bit_identical_to_pre_redesign_ilp(strategy, sobel_arch):
+    g, arch = sobel_arch
     res = run_dse(g, arch, DSEConfig(strategy=strategy, decoder="ilp", **ILP_CFG))
     assert res.front == GOLDEN_FRONTS[(strategy, "ilp")]
 
 
-def test_explorer_path_equals_run_dse_wrapper():
+def test_explorer_path_equals_run_dse_wrapper(sobel_arch):
     """Driving NSGA2Explorer directly over an ExplorationProblem gives the
     same front and history as the run_dse convenience wrapper."""
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     cfg = DSEConfig(strategy="MRB_Explore", **CAPS_CFG)
     res = run_dse(g, arch, cfg)
     problem = ExplorationProblem(graph=g, arch=arch, strategy="MRB_Explore")
@@ -146,14 +144,7 @@ def test_explorer_path_equals_run_dse_wrapper():
 
 
 # ---------------------------------------------------- k-objective end-to-end
-@pytest.fixture(scope="module")
-def gen_problem4():
-    sc = sample_scenarios(seed=3, n=1, families=["stencil_chain"])[0]
-    return ExplorationProblem.from_scenario(
-        sc, objectives=("period", "memory", "core_cost", "comm_volume")
-    )
-
-
+# (the gen_problem4 fixture lives in conftest.py)
 def test_four_objective_exploration_end_to_end(gen_problem4):
     """Acceptance demo: period × memory × core-cost × comm_volume through
     ExplorationProblem on a generated scenario."""
@@ -191,8 +182,8 @@ def test_exploration_run_json_round_trip(gen_problem4, tmp_path):
     assert rerun.save(out_dir=str(tmp_path)) == auto
 
 
-def test_problem_json_round_trip_without_scenario():
-    g, arch = sobel(), paper_architecture()
+def test_problem_json_round_trip_without_scenario(sobel_arch):
+    g, arch = sobel_arch
     p = ExplorationProblem(graph=g, arch=arch, objectives=("period", "comm_volume"),
                            strategy="MRB_Always", decoder="ilp", ilp_budget_s=1.5)
     q = ExplorationProblem.from_json(p.dumps())
@@ -203,8 +194,8 @@ def test_problem_json_round_trip_without_scenario():
 
 
 # ------------------------------------------------------------ random search
-def test_random_search_explorer_seeded_and_comparable():
-    g, arch = sobel(), paper_architecture()
+def test_random_search_explorer_seeded_and_comparable(sobel_arch):
+    g, arch = sobel_arch
     problem = ExplorationProblem(graph=g, arch=arch)
     a = RandomSearchExplorer(samples=40, batch=20, seed=9).explore(problem)
     b = get_explorer("random_search", samples=40, batch=20, seed=9).explore(problem)
@@ -213,14 +204,14 @@ def test_random_search_explorer_seeded_and_comparable():
     assert all(len(p) == 3 for p in a.front)
 
 
-def test_callable_decoder_without_budget_kwarg_is_adapted():
+def test_callable_decoder_without_budget_kwarg_is_adapted(sobel_space):
     """Raw decode functions (no time_budget_s parameter) work both passed
     directly and through the registry."""
     import random
 
     from repro.core import decode_via_heuristic
 
-    sp = GenotypeSpace(sobel(), paper_architecture())
+    sp = sobel_space
     gt = sp.random(random.Random(0))
     direct = evaluate_genotype(sp, gt, decoder=decode_via_heuristic)
     named = evaluate_genotype(sp, gt, decoder="caps_hms")
@@ -238,10 +229,10 @@ def test_shared_engine_rejects_objective_mismatch(gen_problem4):
             )
 
 
-def test_run_provenance_survives_problem_mutation():
+def test_run_provenance_survives_problem_mutation(sobel_arch):
     """Drivers reuse one problem and flip .strategy between explores; each
     run must keep the strategy it actually ran."""
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     problem = ExplorationProblem(graph=g, arch=arch, strategy="Reference")
     explorer = NSGA2Explorer(population=6, offspring=3, generations=1, seed=0)
     with problem.make_engine() as engine:
@@ -252,8 +243,8 @@ def test_run_provenance_survives_problem_mutation():
     assert exp_run.problem.strategy == "MRB_Explore"
 
 
-def test_shared_engine_rejects_foreign_problem():
-    g, arch = sobel(), paper_architecture()
+def test_shared_engine_rejects_foreign_problem(sobel_arch):
+    g, arch = sobel_arch
     problem = ExplorationProblem(graph=g, arch=arch)
     sc = sample_scenarios(seed=1, n=1, families=["stencil_chain"])[0]
     other = ExplorationProblem.from_scenario(sc)

@@ -51,6 +51,73 @@ def test_overflow_underflow_guarded():
         m.write()
 
 
+def test_capacity_boundary_one_slot():
+    """γ=1 boundary: every reader must consume the single token before the
+    writer can go again, and the cycle repeats cleanly."""
+    m = MRBState(1, ("a", "b"))
+    for _ in range(3):  # full wrap cycles through the single slot
+        assert m.can_write() and m.free() == 1
+        m.write()
+        assert not m.can_write() and m.free() == 0
+        assert m.available("a") == 1 and m.available("b") == 1
+        m.read("a")
+        assert not m.can_write()  # b still holds the slot
+        assert m.available("a") == 0 and m.available("b") == 1
+        m.read("b")
+        assert m.available("b") == 0
+    assert m.can_write()
+
+
+def test_capacity_boundary_fill_drain_exact():
+    """Filling to exactly γ then draining to exactly empty hits both index
+    wrap points without tripping the over/underflow guards."""
+    cap = 3
+    m = MRBState(cap, ("r",))
+    for round_ in range(4):  # repeated fill/drain crosses the modulo seam
+        for k in range(cap):
+            assert m.can_write(), (round_, k)
+            m.write()
+            assert m.available("r") == k + 1
+        assert not m.can_write() and m.free() == 0
+        for k in range(cap):
+            assert m.can_read("r"), (round_, k)
+            m.read("r")
+            assert m.available("r") == cap - k - 1
+        assert not m.can_read("r") and m.free() == cap
+
+
+def test_multi_reader_wrap_around_staggered():
+    """Readers consuming at different phases drive ω and each ρ_r through
+    several full wraps; availability always equals the per-reader backlog."""
+    cap = 4
+    readers = ("fast", "slow")
+    m = MRBState(cap, readers)
+    backlog = {r: 0 for r in readers}
+    written = 0
+    # "fast" drains immediately; "slow" lags by up to the full capacity,
+    # so the write index laps both read indices repeatedly.
+    for step in range(6 * cap):
+        if m.can_write():
+            m.write()
+            written += 1
+            for r in readers:
+                backlog[r] += 1
+        m.read("fast")
+        backlog["fast"] -= 1
+        if backlog["slow"] == cap:  # slow only yields when forced
+            m.read("slow")
+            backlog["slow"] -= 1
+        for r in readers:
+            assert m.available(r) == backlog[r], (step, m.snapshot())
+    assert written > 2 * cap  # the indices really wrapped
+    # Drain slow's backlog: frees the writer slot-by-slot.
+    while backlog["slow"]:
+        free_before = m.free()
+        m.read("slow")
+        backlog["slow"] -= 1
+        assert m.free() == free_before + 1
+
+
 @settings(max_examples=200, deadline=None)
 @given(
     capacity=st.integers(1, 8),

@@ -12,6 +12,7 @@ import random
 
 import pytest
 
+from conftest import make_pipelined_sobel, random_decode
 from repro.core import (
     ApplicationGraph,
     ExplorationProblem,
@@ -19,14 +20,11 @@ from repro.core import (
     OBJECTIVES,
     RandomSearchExplorer,
     multicast_actors,
-    paper_architecture,
     pipeline_delays,
-    sobel,
     substitute_mrbs,
 )
-from repro.core.binding import CHANNEL_DECISIONS
 from repro.core.caps_hms import DecodeResult, decode_via_heuristic
-from repro.core.ilp import ExactResult, decode_via_ilp
+from repro.core.ilp import ExactResult
 from repro.core.schedule import (
     attach_binding,
     comm_times,
@@ -55,31 +53,8 @@ NO_TRACE = SimConfig(trace=False)
 
 
 # ------------------------------------------------------------ helpers
-def _pipelined_sobel():
-    g, arch = sobel(), paper_architecture()
-    gt = pipeline_delays(substitute_mrbs(g, {a: 1 for a in multicast_actors(g)}))
-    return gt, arch
-
-
-def _random_decode(gt, arch, rng, decoder="caps_hms", tries=40):
-    cores = sorted(arch.cores)
-    for _ in range(tries):
-        ba = {
-            a: rng.choice(
-                [p for p in cores if gt.actors[a].can_run_on(arch.cores[p].ctype)]
-            )
-            for a in gt.actors
-        }
-        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in gt.channels}
-        if decoder == "caps_hms":
-            res = decode_via_heuristic(gt, arch, cd, ba)
-        else:
-            res = decode_via_ilp(gt, arch, cd, ba, time_budget_s=0.5)
-        if res.feasible:
-            return res
-    raise AssertionError("no feasible decode found")
-
-
+# (_pipelined_sobel / _random_decode moved to conftest.py: imported above
+# as plain functions so the @given property tests can reach them too.)
 def _lower_bound(gt, arch, sched):
     attach_binding(gt, sched.channel_binding)
     rt, wt = comm_times(gt, arch, sched.actor_binding, sched.channel_binding)
@@ -131,7 +106,7 @@ def test_measure_period_unconverged_returns_none():
 def test_single_core_mapping_matches_analytic_period():
     """All actors on one core, PROD placements: the core serializes every
     window, so self-timed period == analytic period == P_lb."""
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     core = sorted(arch.cores)[0]
     ba = {a: core for a in gt.actors}
     cd = {c: "PROD" for c in gt.channels}
@@ -164,10 +139,10 @@ def test_contention_free_chain_matches_analytic_period():
 
 
 def test_contended_mapping_never_beats_lower_bound():
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(7)
     for _ in range(4):
-        res = _random_decode(gt, arch, rng)
+        res = random_decode(gt, arch, rng)
         sim = simulate(gt, arch, res.schedule, NO_TRACE)
         assert not sim.deadlocked
         assert sim.period >= _lower_bound(gt, arch, res.schedule) - 1e-9
@@ -185,15 +160,15 @@ def test_sim_invariants_on_generated_scenarios(seed):
     gt = pipeline_delays(
         substitute_mrbs(g, {a: rng.randint(0, 1) for a in multicast_actors(g)})
     )
-    res = _random_decode(gt, arch, rng)
+    res = random_decode(gt, arch, rng)
     assert check_sim_invariants(gt, arch, res.schedule) == [], sc.name
 
 
 # ------------------------------------------------------- backend parity
 def test_vectorized_matches_events_on_sobel_batch():
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(3)
-    scheds = [_random_decode(gt, arch, rng).schedule for _ in range(4)]
+    scheds = [random_decode(gt, arch, rng).schedule for _ in range(4)]
     ev = [simulate(gt, arch, s, NO_TRACE) for s in scheds]
     vec = batch_simulate(gt, arch, scheds, NO_TRACE)
     for e, v in zip(ev, vec):
@@ -203,9 +178,9 @@ def test_vectorized_matches_events_on_sobel_batch():
 
 
 def test_vectorized_matches_events_with_mrb_ports():
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(4)
-    sched = _random_decode(gt, arch, rng).schedule
+    sched = random_decode(gt, arch, rng).schedule
     cfg = SimConfig(trace=False, mrb_ports=1)
     e = simulate(gt, arch, sched, cfg)
     (v,) = batch_simulate(gt, arch, [sched], cfg)
@@ -218,9 +193,9 @@ def test_vectorized_matches_events_with_mrb_ports():
 def test_pallas_backend_matches_events_on_sobel_batch():
     """The Pallas actor-step kernel (interpreter mode on CPU) executes the
     identical round program: bit-identical firing sequences and periods."""
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(5)
-    scheds = [_random_decode(gt, arch, rng).schedule for _ in range(3)]
+    scheds = [random_decode(gt, arch, rng).schedule for _ in range(3)]
     ev = [simulate(gt, arch, s, NO_TRACE) for s in scheds]
     vp = batch_simulate(gt, arch, scheds, NO_TRACE, backend="pallas")
     for e, v in zip(ev, vp):
@@ -235,10 +210,10 @@ def test_batched_backend_reuses_compiled_functions():
     must reuse the compiled simulator — no retrace (module trace-counter
     hook) — including with donated operand buffers (donation is a no-op
     warning on CPU)."""
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(6)
-    batch1 = [_random_decode(gt, arch, rng).schedule for _ in range(2)]
-    batch2 = [_random_decode(gt, arch, rng).schedule for _ in range(2)]
+    batch1 = [random_decode(gt, arch, rng).schedule for _ in range(2)]
+    batch2 = [random_decode(gt, arch, rng).schedule for _ in range(2)]
     batch_simulate(gt, arch, batch1, NO_TRACE, donate=True)
     before = trace_count()
     out = batch_simulate(gt, arch, batch2, NO_TRACE, donate=True)
@@ -294,7 +269,7 @@ def test_parity_sweep_families_and_decoders(seed):
         substitute_mrbs(g, {a: rng.randint(0, 1) for a in multicast_actors(g)})
     )
     decoder = "caps_hms" if seed % 2 == 0 else "ilp"
-    res = _random_decode(gt, arch, rng, decoder=decoder)
+    res = random_decode(gt, arch, rng, decoder=decoder)
     e = simulate(gt, arch, res.schedule, NO_TRACE)
     (v,) = batch_simulate(gt, arch, [res.schedule], NO_TRACE)
     assert e.fire_times == v.fire_times, (sc.name, decoder)
@@ -307,9 +282,9 @@ def test_parity_sweep_families_and_decoders(seed):
 
 # ------------------------------------------------------- trace & gantt
 def test_trace_segments_do_not_overlap_and_roundtrip(tmp_path):
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(11)
-    res = _random_decode(gt, arch, rng)
+    res = random_decode(gt, arch, rng)
     sim = simulate(gt, arch, res.schedule)
     trace = sim.trace
     assert trace is not None and trace.segments
@@ -333,9 +308,9 @@ def test_trace_segments_do_not_overlap_and_roundtrip(tmp_path):
 # --------------------------------------------------- sim_period objective
 def test_sim_period_objective_registered_and_falls_back():
     assert "sim_period" in OBJECTIVES
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     rng = random.Random(13)
-    res = _random_decode(gt, arch, rng)
+    res = random_decode(gt, arch, rng)
     from repro.core.problem import EvalContext, get_objective
 
     obj = get_objective("sim_period")
@@ -349,11 +324,11 @@ def test_sim_period_objective_registered_and_falls_back():
         set_simulation_enabled(prev)
 
 
-def test_explorer_end_to_end_with_sim_period():
+def test_explorer_end_to_end_with_sim_period(sobel_arch):
     """sim_period is selectable in an ExplorationProblem and drives a full
     explorer run; every feasible archive point carries a measured period
     that respects the lower bound."""
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     problem = ExplorationProblem(
         graph=g, arch=arch, strategy="MRB_Explore",
         objectives=("sim_period", "memory", "core_cost"),
@@ -367,14 +342,14 @@ def test_explorer_end_to_end_with_sim_period():
         assert math.isfinite(ind.objectives[0])
 
 
-def test_engine_honours_sim_config_on_events_route():
+def test_engine_honours_sim_config_on_events_route(sobel_arch):
     """A non-default sim_config defers sim_period past decode so the
     engine's config reaches the simulator even without the vectorized
     backend (the inline objective can only use defaults)."""
     from repro.core import GenotypeSpace
     from repro.core.engine import EvaluationEngine
 
-    g, arch = sobel(), paper_architecture()
+    g, arch = sobel_arch
     space = GenotypeSpace(g, arch)
     rng = random.Random(9)
     gt = space.random(rng)
@@ -392,8 +367,8 @@ def test_engine_honours_sim_config_on_events_route():
 
 
 @pytest.mark.slow
-def test_engine_batched_backends_are_bit_identical():
-    g, arch = sobel(), paper_architecture()
+def test_engine_batched_backends_are_bit_identical(sobel_arch):
+    g, arch = sobel_arch
     objs = ("sim_period", "memory", "core_cost")
     explorer = NSGA2Explorer(population=10, offspring=5, generations=2, seed=5)
     fronts = {}
@@ -413,7 +388,7 @@ def test_infeasible_decode_period_is_inf():
     period comparisons never prefer it (the old -1 sentinel did)."""
     assert DecodeResult(None, False).period == math.inf
     assert ExactResult(None, False, False).period == math.inf
-    gt, arch = _pipelined_sobel()
+    gt, arch = make_pipelined_sobel()
     core = sorted(arch.cores)[0]
     ba = {a: core for a in gt.actors}
     cd = {c: "GLOBAL" for c in gt.channels}

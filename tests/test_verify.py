@@ -1,0 +1,378 @@
+"""Independent schedule verifier + decoder conformance harness (ISSUE 6).
+
+Four layers: (1) the differential sweep — every registered decoder's
+feasible schedules must verify with zero violations across generated
+scenario families; (2) the mutation negative suite — each perturbation
+class of a known-good schedule must be caught with its expected Violation
+kind; (3) the harmonic-period scenario knob and the proven_optimal
+regression it anchors; (4) the CLI / campaign-report integration and the
+optional CP-SAT decoder's gating and cross-check.
+"""
+import json
+import math
+import random
+
+import pytest
+
+from conftest import TINY, make_pipelined_sobel, random_decode, tiny_campaign
+from repro.cli import main as cli_main
+from repro.core import (
+    ApplicationGraph,
+    CampaignRunner,
+    RunStore,
+    decoder_names,
+)
+from repro.core.binding import CHANNEL_DECISIONS
+from repro.core.campaign import build_report
+from repro.core.caps_hms import decode_via_heuristic
+from repro.core.ilp import decode_via_ilp
+from repro.core.schedule import attach_binding, comm_times, period_lower_bound
+from repro.scenarios import (
+    ArchParams,
+    generate_architecture,
+    harmonized,
+    sample_scenarios,
+)
+from repro.scenarios.families import FAMILIES, TOKEN_CLASSES
+from repro.sim import contention_free
+from repro.verify import (
+    MUTATIONS,
+    VIOLATION_KINDS,
+    VerificationReport,
+    Violation,
+    apply_mutation,
+    differential_sweep,
+    mutation_names,
+    verify_decode_result,
+    verify_schedule,
+)
+
+
+def _lower_bound(g, arch, sched):
+    attach_binding(g, sched.channel_binding)
+    rt, wt = comm_times(g, arch, sched.actor_binding, sched.channel_binding)
+    return period_lower_bound(g, arch, sched.actor_binding, rt, wt)
+
+
+def _single_core_schedule(gt, arch):
+    """The same deterministic mapping test_sim's analytic-parity test uses:
+    every actor on one core, PROD placements — feasible, and a core shared
+    by all actors so every mutation class applies."""
+    core = sorted(arch.cores)[0]
+    ba = {a: core for a in gt.actors}
+    cd = {c: "PROD" for c in gt.channels}
+    res = decode_via_heuristic(gt, arch, cd, ba)
+    assert res.feasible
+    return res.schedule
+
+
+# ----------------------------------------------------- positive: clean passes
+def test_known_good_schedules_verify_clean():
+    gt, arch = make_pipelined_sobel()
+    sched = _single_core_schedule(gt, arch)
+    report = verify_schedule(gt, arch, sched)
+    assert report.ok, report.summary()
+    assert report.counts() == {} and report.kinds() == set()
+    rng = random.Random(17)
+    for decoder in ("caps_hms", "ilp"):
+        res = random_decode(gt, arch, rng, decoder=decoder)
+        rep = verify_schedule(gt, arch, res.schedule)
+        assert rep.ok, (decoder, rep.summary())
+
+
+def test_verify_decode_result_vacuous_pass_on_infeasible():
+    gt, arch = make_pipelined_sobel()
+    core = sorted(arch.cores)[0]
+    bad = decode_via_heuristic(
+        gt, arch, {c: "GLOBAL" for c in gt.channels},
+        {a: core for a in gt.actors}, max_period=1,
+    )
+    assert not bad.feasible
+    report = verify_decode_result(gt, arch, bad)
+    assert report.ok and not report.feasible
+    assert "infeasible" in report.summary()
+
+
+# --------------------------------------------------- mutation negative suite
+def test_mutation_registry_covers_expected_kinds():
+    assert set(mutation_names()) == set(MUTATIONS)
+    for name, (_fn, expected) in MUTATIONS.items():
+        assert expected in VIOLATION_KINDS, name
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_each_mutation_class_is_detected(name):
+    """Every perturbation class must be flagged with its expected kind — a
+    verifier that passes a broken schedule is itself broken."""
+    gt, arch = make_pipelined_sobel()
+    sched = _single_core_schedule(gt, arch)
+    assert verify_schedule(gt, arch, sched).ok  # the base must be clean
+    rng = random.Random(f"mutate:{name}")
+    mutated = apply_mutation(name, gt, arch, sched, rng)
+    assert mutated is not None, f"{name} not applicable to the base schedule"
+    report = verify_schedule(gt, arch, mutated)
+    _fn, expected = MUTATIONS[name]
+    assert not report.ok, name
+    assert expected in report.kinds(), (name, expected, report.summary())
+
+
+def test_mutations_detected_across_random_schedules():
+    """The negative suite holds on random feasible schedules too, not just
+    the single-core mapping (skipping classes that do not apply)."""
+    gt, arch = make_pipelined_sobel()
+    rng = random.Random(23)
+    sched = random_decode(gt, arch, rng).schedule
+    assert verify_schedule(gt, arch, sched).ok
+    applied = 0
+    for name, (_fn, expected) in sorted(MUTATIONS.items()):
+        mutated = apply_mutation(name, gt, arch, sched, rng)
+        if mutated is None:
+            continue
+        applied += 1
+        report = verify_schedule(gt, arch, mutated)
+        assert expected in report.kinds(), (name, report.summary())
+    assert applied >= 3
+
+
+# ------------------------------------------------------- differential sweep
+def test_differential_sweep_two_families_zero_violations():
+    report = differential_sweep(
+        seed=0,
+        families=["stencil_chain", "split_join"],
+        per_family=1,
+        samples=2,
+        decoders=("caps_hms", "ilp"),
+        ilp_budget_s=1.0,
+    )
+    assert report["ok"], json.dumps(report["rows"], indent=2)
+    assert report["n_violations"] == 0
+    assert report["n_checked"] >= 4  # 2 scenarios x 2 decoders x >=1 feasible
+    assert {r["decoder"] for r in report["rows"]} == {"caps_hms", "ilp"}
+
+
+def test_differential_sweep_rejects_unknown_size():
+    with pytest.raises(KeyError):
+        differential_sweep(sizes=("enormous",), families=["stencil_chain"])
+
+
+@pytest.mark.slow
+def test_differential_sweep_all_families_both_sizes():
+    """Full conformance matrix: every family x {standard, large} x both
+    decoders — zero violations anywhere."""
+    report = differential_sweep(
+        seed=1,
+        families=sorted(FAMILIES),
+        sizes=("standard", "large"),
+        per_family=1,
+        samples=3,
+        decoders=("caps_hms", "ilp"),
+        ilp_budget_s=1.0,
+    )
+    assert report["ok"], json.dumps(
+        [r for r in report["rows"] if r["n_violations"]], indent=2
+    )
+    assert report["n_checked"] >= 2 * len(FAMILIES)
+
+
+def test_differential_sweep_harmonic_knob():
+    report = differential_sweep(
+        seed=4,
+        families=["stencil_chain"],
+        per_family=1,
+        samples=2,
+        decoders=("caps_hms", "ilp"),
+        ilp_budget_s=1.0,
+        harmonic=True,
+    )
+    assert report["harmonic"] is True
+    assert report["ok"], json.dumps(report["rows"], indent=2)
+
+
+# -------------------------------------------------- harmonic scenario knob
+def test_harmonized_preserves_topology_and_quantizes():
+    """harmonic=True must not disturb the RNG draws (same actors/channels)
+    while quantizing exec times to powers of two and collapsing every token
+    size onto the smallest class."""
+    sc = sample_scenarios(seed=5, n=1, families=["stencil_chain"])[0]
+    hs = harmonized(sc)
+    g, arch = sc.build()
+    hg, harch = hs.build()
+    assert sorted(hg.actors) == sorted(g.actors)
+    assert sorted(hg.channels) == sorted(g.channels)
+    assert {c: (hg.producer[c], tuple(sorted(hg.consumers[c]))) for c in hg.channels} \
+        == {c: (g.producer[c], tuple(sorted(g.consumers[c]))) for c in g.channels}
+    for actor in hg.actors.values():
+        for t in actor.exec_times.values():
+            assert t >= 1 and (t & (t - 1)) == 0, actor.name
+    assert {ch.token_bytes for ch in hg.channels.values()} == {TOKEN_CLASSES[0]}
+    assert harch.signature() == arch.signature()  # architecture untouched
+    # idempotent: harmonizing twice is the same scenario
+    assert harmonized(hs).build()[0].signature() == hg.signature()
+
+
+def test_proven_optimal_never_worse_than_heuristic_on_harmonic():
+    """Satellite regression: on a small harmonic scenario the exact decoder,
+    when it proves optimality, never reports a longer period than CAPS-HMS —
+    and both schedules pass the independent verifier."""
+    sc = harmonized(sample_scenarios(seed=2, n=1, families=["stencil_chain"])[0])
+    g, arch = sc.build()
+    rng = random.Random("harmonic-regression")
+    cores = sorted(arch.cores)
+    proven = 0
+    for _ in range(6):
+        ba = {
+            a: rng.choice(
+                [p for p in cores if g.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in g.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
+        h = decode_via_heuristic(g, arch, cd, ba)
+        e = decode_via_ilp(g, arch, cd, ba, time_budget_s=2.0)
+        assert h.feasible == e.feasible
+        if not h.feasible:
+            continue
+        assert verify_schedule(g, arch, h.schedule).ok
+        assert verify_schedule(g, arch, e.schedule).ok
+        if e.proven_optimal:
+            proven += 1
+            assert e.period <= h.period
+    assert proven, "no mapping reached a proven-optimal exact decode"
+
+
+def test_proven_optimal_equals_heuristic_on_contention_free_chain():
+    """On a contention-free harmonic two-actor chain both decoders land on
+    the analytic lower bound exactly: proven_optimal means equality, not
+    just <=."""
+    g = ApplicationGraph("chain2h")
+    g.add_actor("A", {"t1": 8})
+    g.add_actor("B", {"t1": 4})
+    g.add_channel("c", "A", "B", delay=1, capacity=2, token_bytes=64)
+    arch = generate_architecture(
+        ArchParams(tiles=1, cores_per_tile=2, type_mix="fast_only"), seed=0
+    )
+    ba = {"A": sorted(arch.cores)[0], "B": sorted(arch.cores)[1]}
+    h = decode_via_heuristic(g, arch, {"c": "PROD"}, ba)
+    e = decode_via_ilp(g, arch, {"c": "PROD"}, ba, time_budget_s=2.0)
+    assert h.feasible and e.feasible and e.proven_optimal
+    assert contention_free(g, arch, h.schedule)
+    assert e.period == h.period == _lower_bound(g, arch, h.schedule)
+    assert verify_schedule(g, arch, e.schedule).ok
+    assert verify_schedule(g, arch, h.schedule).ok
+
+
+# --------------------------------------------------------- JSON round-trips
+def test_violation_and_report_json_round_trip():
+    v = Violation("resource_overlap", "core:c0", "two windows overlap",
+                  {"a": "A", "b": "B", "overlap": 3})
+    assert Violation.from_json(json.loads(json.dumps(v.to_json()))) == v
+    report = VerificationReport(period=42, violations=[v])
+    rt = VerificationReport.from_json(json.loads(report.dumps()))
+    assert rt.period == 42 and rt.violations == [v] and not rt.ok
+    assert rt.counts() == {"resource_overlap": 1}
+    empty = VerificationReport.from_json(
+        json.loads(VerificationReport(period=7).dumps())
+    )
+    assert empty.ok and empty.period == 7
+
+
+def test_real_report_survives_json_round_trip():
+    gt, arch = make_pipelined_sobel()
+    sched = _single_core_schedule(gt, arch)
+    mutated = apply_mutation(
+        "shrink_buffer", gt, arch, sched, random.Random(0)
+    )
+    report = verify_schedule(gt, arch, mutated)
+    assert not report.ok
+    rt = VerificationReport.from_json(json.loads(report.dumps()))
+    assert rt.counts() == report.counts()
+    assert [v.to_json() for v in rt.violations] == [
+        v.to_json() for v in report.violations
+    ]
+
+
+# --------------------------------------------------------------- CLI seam
+def test_cli_sim_verify_smoke(tmp_path, capsys):
+    out_path = tmp_path / "verify" / "report.json"
+    rc = cli_main([
+        "sim", "verify", "--families", "stencil_chain", "--per-family", "1",
+        "--samples", "1", "--decoders", "caps_hms", "--out", str(out_path),
+    ])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "sweep:" in out and "OK" in out
+    rep = json.loads(out_path.read_text())
+    assert rep["ok"] and rep["n_violations"] == 0 and rep["rows"]
+
+
+# ------------------------------------------------- campaign verify column
+def test_campaign_report_verify_column(tmp_path, capsys):
+    camp = tiny_campaign(
+        axes={"strategy": ["MRB_Explore"]},
+        explorer_params={**TINY, "generations": 1},
+    )
+    root = str(tmp_path / "campaigns")
+    CampaignRunner(camp, root=root).run()
+    store = RunStore(f"{root}/{camp.campaign_id()}")
+    plain = build_report(camp.expand(), store)
+    assert all(row["verify"] is None for row in plain["cells"].values())
+    checked = build_report(camp.expand(), store, verify=True, verify_limit=2)
+    for tag, row in checked["cells"].items():
+        v = row["verify"]
+        assert v is not None and v["ok"], (tag, v)
+        assert 1 <= v["checked"] <= 2
+        assert v["violations"] == 0 and v["kinds"] == []
+    # CLI flag end-to-end (exit 0 because everything verifies)
+    rc = cli_main([
+        "campaign", "report", camp.campaign_id(), "--root", root,
+        "--verify", "--verify-limit", "1",
+    ])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "verify " in out and "OK" in out
+
+
+# ------------------------------------------------------ optional CP-SAT
+def test_cpsat_gated_when_ortools_absent():
+    """The cpsat module must import cleanly either way; the registry only
+    lists the decoder when ortools is importable, and the raw entrypoint
+    raises a clear error without it."""
+    from repro.core.cpsat import HAVE_ORTOOLS, decode_via_cpsat
+
+    if HAVE_ORTOOLS:
+        assert "cpsat" in decoder_names()
+    else:
+        assert "cpsat" not in decoder_names()
+        with pytest.raises(RuntimeError, match="ortools"):
+            decode_via_cpsat(None, None, {}, {})
+
+
+def test_cpsat_cross_checks_against_exact_decoder():
+    """Where ortools is installed: CP-SAT and the branch-and-bound exact
+    decoder agree on feasibility, agree on the period whenever both prove
+    optimality, and both pass the verifier on a harmonic scenario."""
+    pytest.importorskip("ortools")
+    from repro.core.cpsat import decode_via_cpsat
+
+    sc = harmonized(sample_scenarios(seed=2, n=1, families=["stencil_chain"])[0])
+    g, arch = sc.build()
+    rng = random.Random("cpsat-cross")
+    cores = sorted(arch.cores)
+    compared = 0
+    for _ in range(4):
+        ba = {
+            a: rng.choice(
+                [p for p in cores if g.actors[a].can_run_on(arch.cores[p].ctype)]
+            )
+            for a in g.actors
+        }
+        cd = {c: rng.choice(CHANNEL_DECISIONS) for c in g.channels}
+        e = decode_via_ilp(g, arch, cd, ba, time_budget_s=3.0)
+        s = decode_via_cpsat(g, arch, cd, ba, time_budget_s=10.0)
+        assert e.feasible == s.feasible
+        if e.feasible:
+            assert verify_schedule(g, arch, s.schedule).ok
+            if e.proven_optimal and s.proven_optimal:
+                compared += 1
+                assert e.period == s.period
+    assert compared, "no mapping was proven optimal by both decoders"
