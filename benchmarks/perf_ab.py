@@ -7,6 +7,7 @@ Run (one experiment, ~2-10 min each):
   PYTHONPATH=src python -m benchmarks.perf_ab --exp decode_capacity
   PYTHONPATH=src python -m benchmarks.perf_ab --exp dse_cache
   PYTHONPATH=src python -m benchmarks.perf_ab --exp sim_backends
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp service
 """
 import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -412,11 +413,177 @@ def sim_backends_ab(batch: int = 64, repeats: int = 3):
     return results
 
 
+def service_ab(seeds: int = 3, workers: int = 2, repeats: int = 2):
+    """A/B the campaign service against the serial local runner on a
+    multi-tenant load: a seeded ``2 strategies x seeds`` campaign
+    submitted simultaneously by two tenants.
+
+      local_serial   CampaignRunner, jobs=1, in-memory store — the
+                     pre-service baseline, run once per tenant (no
+                     sharing), so the arm carries the full 2x decode bill
+      served         both tenants against one service (ephemeral port,
+                     ``workers`` worker processes, shared dedup store):
+                     each unique hash is decoded once, the second tenant
+                     is pure dedup, and unique decodes fan out across the
+                     pool
+
+    Fronts must be bit-identical across arms (the service changes wall
+    time only).  Arms are interleaved and the per-arm minimum reported
+    (shared-container wall-clock noise swamps sequential medians); the
+    served arm gets a fresh store per repeat so every repeat pays its
+    decodes.  BENCH_service.json keeps a ``history`` list — every run
+    appends the previous head — and the run *fails* (CI slow job) when
+    the served-vs-serial speedup drops below the last recorded value by
+    more than 20% (set REPRO_BENCH_NO_GATE=1 to bypass).
+    """
+    import tempfile
+    import threading
+    import time as _time
+
+    from repro.core import Campaign, CampaignRunner, RunStore
+    from repro.scenarios import sample_scenarios
+    from repro.service import ServiceClient, make_server
+
+    # A large-size scenario so decode work dominates the service's
+    # dispatch/HTTP overhead (~1.7s/cell; the small tiers decode in
+    # milliseconds and would benchmark the plumbing, not the scheduling).
+    sc = sample_scenarios(seed=0, n=1, families=["stencil_chain"], size="large")[0]
+    campaign = Campaign(
+        name="service-ab",
+        problems=[{"label": "stencil0", "scenario": sc.to_json()}],
+        axes={"strategy": ["Reference", "MRB_Explore"],
+              "seed": list(range(seeds))},
+        explorer="nsga2",
+        explorer_params={"population": 24, "offspring": 12, "generations": 8,
+                         "track_hypervolume": False},
+    )
+    tenants = ("alice", "bob")
+    n_unique = len({c.spec_hash() for c in campaign.expand()})
+
+    def run_serial():
+        t0 = _time.monotonic()
+        results = [
+            CampaignRunner(campaign, store=RunStore(None)).run()
+            for _ in tenants
+        ]
+        return _time.monotonic() - t0, results[0]
+
+    def run_served():
+        root = tempfile.mkdtemp(prefix="service-ab-")
+        server, service = make_server(root, port=0, workers=workers)
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        host, port = server.server_address[:2]
+        client = ServiceClient(f"http://{host}:{port}")
+        statuses = {}
+
+        def submit(tenant):
+            sub = client.submit(campaign.to_json(), tenant=tenant)
+            statuses[tenant] = client.wait(sub["submission_id"], timeout_s=600)
+
+        t0 = _time.monotonic()
+        threads = [threading.Thread(target=submit, args=(t,)) for t in tenants]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = _time.monotonic() - t0
+        try:
+            metrics = client.metrics()
+        finally:
+            server.shutdown()
+            server.server_close()
+            service.close()
+        assert metrics["counters"]["cells_executed"] == n_unique, (
+            f"served arm decoded {metrics['counters']['cells_executed']} "
+            f"cells, expected one per unique hash ({n_unique})"
+        )
+        return wall, statuses, metrics
+
+    # Warm-up: one single-tenant serial run (imports + JIT; every timed
+    # run below still pays its decodes cold — fresh stores throughout).
+    CampaignRunner(campaign, store=RunStore(None)).run()
+    walls = {"local_serial": [], "served": []}
+    last_serial = last_served = None
+    for _ in range(repeats):
+        w, last_serial = run_serial()
+        walls["local_serial"].append(w)
+        w, last_served, last_metrics = run_served()
+        walls["served"].append(w)
+
+    fronts_identical = all(
+        [tuple(p) for p in status["report"]["cells"][tag]["front"]]
+        == last_serial.front(tag)
+        for status in last_served.values()
+        for tag in last_serial.cells
+    )
+    assert fronts_identical, "served fronts diverged from the local runner"
+
+    results = {
+        "local_serial": {"wall_s": min(walls["local_serial"]),
+                         "decodes": n_unique * len(tenants)},
+        "served": {"wall_s": min(walls["served"]),
+                   "decodes": n_unique,
+                   "dedup_hit_rate": last_metrics["dedup_hit_rate"],
+                   "workers": workers},
+    }
+    speedups = {
+        "served_vs_serial": results["local_serial"]["wall_s"]
+        / results["served"]["wall_s"],
+    }
+    for arm, r in results.items():
+        print(f"arm={arm:12s} wall={r['wall_s']:.2f}s decodes={r['decodes']}",
+              flush=True)
+    print(f"speedup served vs local_serial: {speedups['served_vs_serial']:.2f}x "
+          f"(dedup_hit_rate={last_metrics['dedup_hit_rate']:.2f})")
+    print(f"fronts bit-identical across arms: OK "
+          f"({len(tenants)} tenants x {n_unique} cells)")
+
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_service.json")
+    prev = None
+    try:
+        with open(bench_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        pass
+    history = list(prev.get("history", [])) if prev else []
+    if prev:
+        history.append(
+            {k: prev.get(k) for k in ("arms", "speedups", "fronts_identical")}
+        )
+    bench = {
+        "experiment": "service",
+        "config": {"family": "stencil_chain", "strategies": 2, "seeds": seeds,
+                   "tenants": len(tenants), "workers": workers,
+                   "repeats": repeats, "n_unique_cells": n_unique},
+        "arms": results,
+        "speedups": speedups,
+        "fronts_identical": fronts_identical,
+        "history": history[-24:],
+    }
+    # Regression gate (CI slow job): the served speedup must stay within
+    # 20% of its last recorded value.  Checked before the write so a
+    # regressed run never replaces the baseline it failed against.
+    if prev and prev.get("speedups") and not os.environ.get("REPRO_BENCH_NO_GATE"):
+        for name, s in speedups.items():
+            last = prev["speedups"].get(name)
+            if last and s < 0.8 * last:
+                raise SystemExit(
+                    f"service regression: {name} speedup {s:.2f}x dropped "
+                    f">20% below last recorded {last:.2f}x "
+                    f"(BENCH_service.json left unchanged)"
+                )
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(bench_path)}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True,
                     choices=["ce_mode", "microbatch", "decode_capacity",
-                             "dse_cache", "sim_backends"])
+                             "dse_cache", "sim_backends", "service"])
     ap.add_argument("--arch", default="gemma2-9b")
     args = ap.parse_args()
 
@@ -425,6 +592,9 @@ def main():
         return
     if args.exp == "sim_backends":
         sim_backends_ab()
+        return
+    if args.exp == "service":
+        service_ab()
         return
 
     if args.exp == "ce_mode":

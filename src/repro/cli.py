@@ -5,6 +5,13 @@ inspecting experiments (see README "Campaign API").
     python -m repro campaign resume ID_OR_DIR [--jobs N] [--root DIR]
     python -m repro campaign report ID_OR_DIR [--root DIR] [--verify]
     python -m repro campaign list [--root DIR]
+    python -m repro campaign serve [--host H] [--port P] [--workers N]
+                                   [--service-root DIR]
+    python -m repro campaign submit SPEC.json --url http://H:P
+                                   [--tenant T] [--priority N]
+                                   [--stream] [--no-wait]
+    python -m repro campaign status SUBMISSION_ID --url http://H:P
+    python -m repro campaign metrics --url http://H:P
     python -m repro problem validate SPEC.json
     python -m repro problem explore SPEC.json [--explorer nsga2]
                                     [--params '{"generations": 8, ...}']
@@ -149,6 +156,76 @@ def _cmd_campaign_list(args) -> int:
             f"{os.path.basename(d):48s} "
             f"{manifest['campaign'].get('name', '?'):24s} {done}/{total} cells"
         )
+    return 0
+
+
+# ------------------------------------------------------------------ service
+def _cmd_campaign_serve(args) -> int:
+    from .service import DEFAULT_SERVICE_ROOT, serve
+    from .service.scheduler import SchedulerConfig
+
+    serve(
+        args.service_root or DEFAULT_SERVICE_ROOT,
+        host=args.host,
+        port=args.port,
+        workers=args.workers,
+        config=SchedulerConfig(max_retries=args.max_retries),
+    )
+    return 0
+
+
+def _cmd_campaign_submit(args) -> int:
+    from .service import ServiceClient
+
+    campaign = Campaign.load(args.spec)
+    client = ServiceClient(args.url)
+    sub = client.submit(
+        campaign.to_json(), tenant=args.tenant, priority=args.priority
+    )
+    print(
+        f"submitted {sub['submission_id']}: {sub['n_cells']} cells "
+        f"({sub['n_pending']} pending, {sub['n_resumed']} already stored)"
+    )
+    if args.stream:
+        for event in client.events(sub["submission_id"]):
+            bits = [event["type"]]
+            if event.get("tag"):
+                bits.append(event["tag"])
+            if event.get("wall_s") is not None:
+                bits.append(f"{event['wall_s']:.2f}s")
+            print("  " + " ".join(str(b) for b in bits), flush=True)
+    if args.wait or args.stream:
+        status = client.wait(sub["submission_id"], timeout_s=args.timeout)
+        report = status["report"]
+        sched = status.get("scheduler") or {}
+        if sched.get("errors"):
+            print(f"FAILED: {sched['errors'][0]}", file=sys.stderr)
+            return 1
+        print(f"done: {report['n_completed']}/{report['n_cells']} cells")
+        _print_report_summary(report)
+        return 0
+    return 0
+
+
+def _cmd_campaign_status(args) -> int:
+    from .service import ServiceClient
+
+    status = ServiceClient(args.url).status(args.id)
+    report = status["report"]
+    print(
+        f"{status['submission_id']}: "
+        f"{'done' if status['done'] else 'running'} "
+        f"({report['n_completed']}/{report['n_cells']} cells)"
+    )
+    _print_report_summary(report)
+    return 0
+
+
+def _cmd_campaign_metrics(args) -> int:
+    from .service import ServiceClient
+
+    m = ServiceClient(args.url).metrics()
+    print(json.dumps(m, indent=2, sort_keys=True))
     return 0
 
 
@@ -330,6 +407,34 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = csub.add_parser("list", help="list campaign stores")
     p.add_argument("--root", default=DEFAULT_CAMPAIGN_ROOT)
     p.set_defaults(fn=_cmd_campaign_list)
+    p = csub.add_parser("serve", help="run the multi-tenant campaign service")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8321)
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--max-retries", type=int, default=2, dest="max_retries",
+                   help="per-unit retries after worker death")
+    p.add_argument("--service-root", default=None, dest="service_root",
+                   help="service store root (default runs/service)")
+    p.set_defaults(fn=_cmd_campaign_serve)
+    p = csub.add_parser("submit", help="submit a campaign spec to a served instance")
+    p.add_argument("spec", help="Campaign JSON file")
+    p.add_argument("--url", required=True, help="service base URL")
+    p.add_argument("--tenant", default="default")
+    p.add_argument("--priority", type=int, default=0)
+    p.add_argument("--stream", action="store_true",
+                   help="stream per-cell progress events")
+    p.add_argument("--no-wait", dest="wait", action="store_false",
+                   help="return right after submission")
+    p.add_argument("--timeout", type=float, default=None,
+                   help="max seconds to wait for completion")
+    p.set_defaults(fn=_cmd_campaign_submit, wait=True)
+    p = csub.add_parser("status", help="incremental report of a served submission")
+    p.add_argument("id", help="submission id (tenant--campaign_id)")
+    p.add_argument("--url", required=True)
+    p.set_defaults(fn=_cmd_campaign_status)
+    p = csub.add_parser("metrics", help="live service metrics (queue, dedup, tenants)")
+    p.add_argument("--url", required=True)
+    p.set_defaults(fn=_cmd_campaign_metrics)
 
     prob = sub.add_parser("problem", help="single ExplorationProblem utilities")
     psub = prob.add_subparsers(dest="action", required=True)
@@ -368,7 +473,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=_cmd_sim_verify)
 
     args = ap.parse_args(argv)
-    return args.fn(args)
+    try:
+        return args.fn(args)
+    except KeyboardInterrupt:
+        return 130
+    except (OSError, ValueError, KeyError, RuntimeError) as e:
+        # Expected operational failures (bad spec file, malformed JSON,
+        # unknown registry name, unreachable service) get a one-line
+        # diagnostic instead of a traceback; genuine bugs still raise.
+        msg = e.args[0] if isinstance(e, KeyError) and e.args else e
+        print(f"repro: error: {msg}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

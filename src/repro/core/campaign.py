@@ -419,41 +419,17 @@ def _execute_group(
     engine_overrides: Optional[Dict[str, Any]] = None,
 ) -> List[str]:
     """One engine-sharing group of cells, executed serially with a shared
-    engine, each artifact written atomically into ``store`` the moment it
-    completes.  ``engine_overrides`` are runner-level perf knobs (e.g.
+    engine through the scheduler's single-cell path (claims + dedup
+    included), each artifact written atomically into ``store`` the moment
+    it completes.  ``engine_overrides`` are runner-level perf knobs (e.g.
     ``n_workers`` forced serial under a wide process pool) layered over
     each cell's engine kwargs at execution time only — they are not part
     of the cells, their hashes, or the manifest.  Returns the completed
     spec hashes."""
-    from .problem import ExplorationProblem
+    from ..service.scheduler import run_groups_local
 
-    engine = None
-    done: List[str] = []
-    try:
-        for cell in cells:
-            if engine is None:
-                problem = ExplorationProblem.from_json(cell.problem)
-                engine = problem.make_engine(
-                    **{**cell.engine, **(engine_overrides or {})}
-                )
-            art = run_cell(cell, engine=engine)
-            store.save_cell(art["spec_hash"], art)
-            done.append(art["spec_hash"])
-    finally:
-        if engine is not None:
-            engine.close()
-    return done
-
-
-def _run_shard(payload) -> List[str]:
-    """Process-pool twin of :func:`_execute_group` — module-level so the
-    campaign pool can pickle it; rebuilds the store from its root."""
-    store_root, cell_dicts, engine_overrides = payload
-    return _execute_group(
-        [CampaignCell.from_json(d) for d in cell_dicts],
-        RunStore(store_root),
-        engine_overrides,
-    )
+    return run_groups_local([list(cells)], store, jobs=1,
+                            engine_overrides=engine_overrides)
 
 
 # ==========================================================================
@@ -510,9 +486,8 @@ def build_report(
     missing: List[str] = []
     for cell in cells:
         h = cell.spec_hash()
-        try:
-            art = store.load_cell(h)
-        except KeyError:
+        art = store.try_load_cell(h)  # corrupt artifacts count as missing
+        if art is None:
             missing.append(cell.tag)
             continue
         run = art["run"]
@@ -646,41 +621,54 @@ class CampaignRunner:
                 f"campaign expands to distinct cells with identical tags "
                 f"{dupes} — give the problem templates distinct labels"
             )
+        # Fail fast on registry typos so the CLI reports one line instead
+        # of an exploration-time traceback out of a worker.
+        from .decoders import decoder_names
+        from .explorers import explorer_names
+
+        for cell in self.cells:
+            dec = cell.problem.get("decoder", "caps_hms")
+            if dec not in decoder_names():
+                raise ValueError(
+                    f"unknown decoder {dec!r} (cell {cell.tag}); "
+                    f"registered: {', '.join(decoder_names())}"
+                )
+            if cell.explorer not in explorer_names():
+                raise ValueError(
+                    f"unknown explorer {cell.explorer!r}; "
+                    f"registered: {', '.join(explorer_names())}"
+                )
 
     def run(self, *, jobs: Optional[int] = None) -> CampaignResult:
         t0 = time.monotonic()
         jobs = self.jobs if jobs is None else jobs
         self.store.write_manifest(self.campaign.manifest())
 
-        done = set(self.store.completed())
+        # A cell counts as done only if its artifact parses: a truncated
+        # or corrupt file (outside interference — our writes are atomic)
+        # warns and re-executes instead of raising at report time.
+        done = {
+            h for h in self.store.completed()
+            if self.store.try_load_cell(h) is not None
+        }
         pending = [c for c in self.cells if c.spec_hash() not in done]
         skipped = [c.spec_hash() for c in self.cells if c.spec_hash() in done]
 
         # Shard at engine-sharing granularity, preserving expansion order
-        # (or per-cell when the campaign wants cold-cache wall times).
+        # (or per-cell when the campaign wants cold-cache wall times), and
+        # drain the groups through the service scheduler in local mode —
+        # inline for serial/in-memory runs, a supervised worker pool for
+        # jobs > 1.  Served campaigns run the identical path.
         shards: Dict[str, List[CampaignCell]] = {}
         for i, cell in enumerate(pending):
             key = cell.engine_key() if self.campaign.share_engines else f"#{i}"
             shards.setdefault(key, []).append(cell)
-        executed: List[str] = []
-        if jobs > 1 and self.store.root is not None and len(shards) > 1:
-            from concurrent.futures import ProcessPoolExecutor, as_completed
+        from ..service.scheduler import run_groups_local
 
-            payloads = [
-                (self.store.root, [c.to_json() for c in group], self.engine_overrides)
-                for group in shards.values()
-            ]
-            with ProcessPoolExecutor(max_workers=jobs) as pool:
-                futures = [pool.submit(_run_shard, p) for p in payloads]
-                for fut in as_completed(futures):
-                    executed.extend(fut.result())
-        else:
-            # Serial: execute in-process against self.store, so in-memory
-            # stores (root=None) work and no pickling round-trip is paid.
-            for group in shards.values():
-                executed.extend(
-                    _execute_group(group, self.store, self.engine_overrides)
-                )
+        executed = run_groups_local(
+            list(shards.values()), self.store,
+            jobs=jobs, engine_overrides=self.engine_overrides,
+        )
 
         report = build_report(self.cells, self.store)
         self.store.write_report(report)

@@ -14,22 +14,44 @@ A :class:`RunStore` holds the results of one campaign under
   is exactly what makes ``campaign resume`` free.
 * ``report.json`` — the cross-cell report (fronts, relative-hypervolume
   table, per-backend timing); derived data, regenerate at will.
+* ``claims/<spec_hash>.claim`` — in-flight execution claims (service
+  mode).  A claim is taken with ``O_CREAT|O_EXCL`` — the filesystem is
+  the arbiter, so two workers (threads, processes, or machines sharing
+  the store) can never both decode the same cell; claim files carry
+  their owner and are refreshed as a heartbeat, so a claim whose owner
+  died (SIGKILL) goes stale and is taken over after ``ttl_s``.
+
+Multi-writer discipline: cell artifacts are write-once-per-content
+(atomic ``os.replace`` of identical payloads — any winner is correct);
+``manifest.json`` writes additionally serialize through an advisory
+``fcntl`` lock on ``<root>/.lock`` so concurrent submitters of the same
+campaign never interleave.
 
 ``RunStore(None)`` keeps everything in memory — used by A/B benchmarks
 and tests that must re-execute every cell on every repeat.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
-from typing import Any, Dict, List, Optional
+import time
+import warnings
+from typing import Any, Dict, Iterator, List, Optional
+
+try:  # POSIX only; the claim protocol itself never needs it, the
+    import fcntl  # advisory store lock degrades to a no-op without it.
+except ImportError:  # pragma: no cover
+    fcntl = None  # type: ignore[assignment]
 
 __all__ = ["RunStore", "canonical_json", "list_campaign_dirs"]
 
 MANIFEST = "manifest.json"
 REPORT = "report.json"
 CELL_DIR = "cells"
+CLAIM_DIR = "claims"
+LOCK_FILE = ".lock"
 
 
 def canonical_json(d: Any) -> str:
@@ -68,10 +90,146 @@ class RunStore:
     def __init__(self, root: Optional[str]) -> None:
         self.root = root
         self._mem: Dict[str, str] = {}  # in-memory mode: name -> text
+        self._mem_claims: Dict[str, Dict[str, Any]] = {}  # hash -> claim info
 
     # ----------------------------------------------------------------- paths
     def cell_path(self, spec_hash: str) -> str:
         return os.path.join(self.root or "", CELL_DIR, f"{spec_hash}.json")
+
+    def claim_path(self, spec_hash: str) -> str:
+        return os.path.join(self.root or "", CLAIM_DIR, f"{spec_hash}.claim")
+
+    # ------------------------------------------------------------------ lock
+    @contextlib.contextmanager
+    def lock(self) -> Iterator[None]:
+        """Advisory cross-process exclusive lock on the whole store
+        (``flock`` on ``<root>/.lock``).  Guards read-modify-write and
+        claim-takeover windows; plain artifact writes don't need it
+        (``os.replace`` is atomic on its own).  No-op for in-memory
+        stores and on platforms without ``fcntl``."""
+        if self.root is None or fcntl is None:
+            yield
+            return
+        os.makedirs(self.root, exist_ok=True)
+        fd = os.open(os.path.join(self.root, LOCK_FILE), os.O_CREAT | os.O_RDWR, 0o666)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+            finally:
+                os.close(fd)
+
+    # ---------------------------------------------------------------- claims
+    def claim(self, spec_hash: str, owner: str, *, ttl_s: Optional[float] = None) -> bool:
+        """Try to claim ``spec_hash`` for execution.  Exactly one caller
+        wins (``O_CREAT|O_EXCL`` — the filesystem arbitrates across
+        processes); everyone else gets ``False`` and should either wait
+        for the artifact or move on.  A claim older than ``ttl_s``
+        seconds (owner presumed dead — claims are heartbeat-refreshed via
+        :meth:`refresh_claim`) is broken and re-taken under the store
+        lock.
+
+        Only a *loadable* artifact refuses the claim: a corrupt one
+        counts as missing everywhere else (:meth:`try_load_cell`), so it
+        must not also block the re-execution that would heal it — that
+        combination would park every would-be executor forever."""
+        if self.try_load_cell(spec_hash) is not None:
+            return False
+        if self.root is None:
+            if spec_hash in self._mem_claims:
+                return False
+            self._mem_claims[spec_hash] = {"owner": owner, "time": time.time()}
+            return True
+        path = self.claim_path(spec_hash)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        payload = canonical_json({"owner": owner, "pid": os.getpid(), "time": time.time()})
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o666)
+        except FileExistsError:
+            if ttl_s is None:
+                return False
+            try:
+                age = time.time() - os.stat(path).st_mtime
+            except OSError:  # released between the open and the stat
+                age = None
+            if age is None or age <= ttl_s:
+                return False
+            # Stale claim: break it under the store lock so two takeover
+            # attempts can't both win.
+            with self.lock():
+                try:
+                    if time.time() - os.stat(path).st_mtime <= ttl_s:
+                        return False  # owner heartbeat arrived meanwhile
+                    os.unlink(path)
+                except OSError:
+                    pass
+                try:
+                    fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o666)
+                except FileExistsError:
+                    return False
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        return True
+
+    def refresh_claim(self, spec_hash: str, owner: str) -> None:
+        """Heartbeat: bump the claim's mtime so TTL-based takeover
+        doesn't fire on a live, long-running decode."""
+        if self.root is None:
+            info = self._mem_claims.get(spec_hash)
+            if info is not None and info.get("owner") == owner:
+                info["time"] = time.time()
+            return
+        try:
+            os.utime(self.claim_path(spec_hash))
+        except OSError:
+            pass
+
+    def release_claim(self, spec_hash: str) -> None:
+        if self.root is None:
+            self._mem_claims.pop(spec_hash, None)
+            return
+        try:
+            os.unlink(self.claim_path(spec_hash))
+        except OSError:
+            pass
+
+    def claim_info(self, spec_hash: str) -> Optional[Dict[str, Any]]:
+        """The live claim record for ``spec_hash`` (or None)."""
+        if self.root is None:
+            info = self._mem_claims.get(spec_hash)
+            return dict(info) if info is not None else None
+        try:
+            with open(self.claim_path(spec_hash)) as f:
+                return json.loads(f.read())
+        except (OSError, ValueError):
+            return None
+
+    def release_claims_of(self, owner: str) -> List[str]:
+        """Drop every claim held by ``owner`` (a dead worker's in-flight
+        cells, released by the supervisor before retrying them).  Returns
+        the released hashes."""
+        released: List[str] = []
+        if self.root is None:
+            for h in [h for h, i in self._mem_claims.items() if i.get("owner") == owner]:
+                self._mem_claims.pop(h, None)
+                released.append(h)
+            return released
+        d = os.path.join(self.root, CLAIM_DIR)
+        try:
+            names = os.listdir(d)
+        except OSError:
+            return released
+        for name in names:
+            if not name.endswith(".claim"):
+                continue
+            h = name[: -len(".claim")]
+            info = self.claim_info(h)
+            if info is not None and info.get("owner") == owner:
+                self.release_claim(h)
+                released.append(h)
+        return released
 
     def _read(self, name: str) -> Optional[str]:
         if self.root is None:
@@ -122,6 +280,26 @@ class RunStore:
             raise KeyError(f"no cell artifact for {spec_hash}")
         return json.loads(text)
 
+    def try_load_cell(self, spec_hash: str) -> Optional[Dict[str, Any]]:
+        """Like :meth:`load_cell` but treats an unreadable or truncated
+        artifact as missing: warn and return None, so resume re-executes
+        the cell instead of dying on ``json.JSONDecodeError`` (a torn
+        artifact can only come from outside interference — our own writes
+        go through ``os.replace`` — but the store should still heal)."""
+        text = self._read(os.path.join(CELL_DIR, f"{spec_hash}.json"))
+        if text is None:
+            return None
+        try:
+            return json.loads(text)
+        except ValueError:
+            warnings.warn(
+                f"corrupt cell artifact {self.cell_path(spec_hash)} — "
+                f"treating as missing (will re-execute)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return None
+
     def delete_cell(self, spec_hash: str) -> None:
         if self.root is None:
             self._mem.pop(os.path.join(CELL_DIR, f"{spec_hash}.json"), None)
@@ -133,7 +311,12 @@ class RunStore:
 
     # ------------------------------------------------------ manifest / report
     def write_manifest(self, manifest: Dict[str, Any]) -> str:
-        return self._write(MANIFEST, canonical_json(manifest) + "\n")
+        # Serialized under the store lock: concurrent submitters of one
+        # campaign (service mode) write byte-identical manifests, but the
+        # lock keeps the temp-file churn and any future read-modify-write
+        # of the manifest race-free.
+        with self.lock():
+            return self._write(MANIFEST, canonical_json(manifest) + "\n")
 
     def read_manifest(self) -> Optional[Dict[str, Any]]:
         text = self._read(MANIFEST)

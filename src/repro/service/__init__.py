@@ -1,0 +1,33 @@
+"""Campaign service: multi-tenant DSE serving (README "Campaign service").
+
+The production-scale layer over the Campaign API — a shared
+content-addressed cell store with cross-campaign/cross-tenant dedup
+(:mod:`repro.service.store`), a work-stealing fair-share scheduler with
+worker supervision (:mod:`repro.service.scheduler`), an HTTP/JSON server
+with streaming progress and live metrics (:mod:`repro.service.server`),
+and a stdlib client (:mod:`repro.service.client`).
+
+`python -m repro campaign serve` / `campaign submit --url ...` are the
+CLI entrypoints; the local :class:`~repro.core.campaign.CampaignRunner`
+drives the same scheduler in-process, so local and served campaigns are
+bit-identical.
+"""
+from .client import ServiceClient, ServiceError
+from .scheduler import Scheduler, SchedulerConfig, WorkUnit, run_groups_local
+from .server import CampaignService, make_server, serve
+from .store import DEFAULT_SERVICE_ROOT, CampaignView, GlobalStore
+
+__all__ = [
+    "CampaignService",
+    "CampaignView",
+    "DEFAULT_SERVICE_ROOT",
+    "GlobalStore",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServiceClient",
+    "ServiceError",
+    "WorkUnit",
+    "make_server",
+    "run_groups_local",
+    "serve",
+]

@@ -1,0 +1,126 @@
+"""HTTP client for the campaign service (stdlib ``urllib`` only).
+
+    from repro.service import ServiceClient
+    client = ServiceClient("http://127.0.0.1:8321")
+    sub = client.submit(campaign.to_json(), tenant="alice")
+    for event in client.events(sub["submission_id"]):
+        print(event["type"], event.get("tag", ""))
+    report = client.wait(sub["submission_id"])["report"]
+
+Used by ``python -m repro campaign submit --url ...`` and by the service
+smoke/benchmark drivers; nothing here imports the heavy core, so a thin
+submit-only client stays cheap.
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Dict, Iterator, List, Optional
+
+__all__ = ["ServiceClient", "ServiceError"]
+
+
+class ServiceError(RuntimeError):
+    """An HTTP-level failure talking to the campaign service."""
+
+    def __init__(self, code: int, message: str) -> None:
+        super().__init__(f"HTTP {code}: {message}")
+        self.code = code
+
+
+class ServiceClient:
+    def __init__(self, base_url: str, *, timeout_s: float = 30.0) -> None:
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = timeout_s
+
+    # ------------------------------------------------------------- plumbing
+    def _request(self, path: str, body: Optional[Dict[str, Any]] = None) -> Any:
+        data = None if body is None else json.dumps(body).encode()
+        req = urllib.request.Request(
+            self.base_url + path,
+            data=data,
+            headers={"Content-Type": "application/json"} if data else {},
+            method="POST" if data is not None else "GET",
+        )
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return json.loads(resp.read().decode())
+        except urllib.error.HTTPError as e:
+            try:
+                message = json.loads(e.read().decode()).get("error", str(e))
+            except Exception:
+                message = str(e)
+            raise ServiceError(e.code, message) from None
+        except urllib.error.URLError as e:
+            raise ServiceError(0, f"cannot reach {self.base_url}: {e.reason}") from None
+
+    # ------------------------------------------------------------------ api
+    def healthz(self) -> Dict[str, Any]:
+        return self._request("/healthz")
+
+    def submit(
+        self,
+        campaign_spec: Dict[str, Any],
+        *,
+        tenant: str = "default",
+        priority: int = 0,
+    ) -> Dict[str, Any]:
+        return self._request(
+            "/campaigns",
+            {"campaign": campaign_spec, "tenant": tenant, "priority": priority},
+        )
+
+    def submissions(self) -> List[str]:
+        return self._request("/campaigns")["submissions"]
+
+    def status(self, submission_id: str) -> Dict[str, Any]:
+        return self._request(f"/campaigns/{submission_id}")
+
+    def metrics(self) -> Dict[str, Any]:
+        return self._request("/metrics")
+
+    def events(
+        self, submission_id: str, *, since: int = 0
+    ) -> Iterator[Dict[str, Any]]:
+        """Stream per-cell progress as parsed JSON-lines events until the
+        campaign finishes (the terminal ``stream_end`` line is consumed,
+        not yielded)."""
+        req = urllib.request.Request(
+            f"{self.base_url}/campaigns/{submission_id}/events?since={since}"
+        )
+        with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+            if resp.status != 200:
+                raise ServiceError(resp.status, resp.read().decode()[:200])
+            for line in resp:
+                line = line.strip()
+                if not line:
+                    continue
+                event = json.loads(line.decode())
+                if event.get("type") == "stream_end":
+                    return
+                yield event
+
+    def wait(
+        self,
+        submission_id: str,
+        *,
+        timeout_s: Optional[float] = None,
+        poll_s: float = 0.2,
+    ) -> Dict[str, Any]:
+        """Poll ``status`` until the campaign is done; returns the final
+        status (with its full incremental report)."""
+        deadline = None if timeout_s is None else time.monotonic() + timeout_s
+        while True:
+            status = self.status(submission_id)
+            if status["done"]:
+                return status
+            sched = status.get("scheduler") or {}
+            if sched.get("errors"):
+                return status  # failed units will never complete; stop polling
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"campaign {submission_id} not done after {timeout_s}s"
+                )
+            time.sleep(poll_s)

@@ -199,6 +199,40 @@ def test_kill_resume_and_manifest_identity(tmp_path):
         assert res2.front(cell.tag) == res1.front(cell.tag)
 
 
+def test_resume_reexecutes_corrupt_cell_artifact(tmp_path, capsys):
+    """A truncated ``cells/<hash>.json`` (torn disk, external meddling —
+    our own writes are atomic) must resume as *missing*: warn and
+    re-execute exactly that cell instead of dying in JSONDecodeError at
+    report time."""
+    camp = tiny_campaign()
+    store_dir = str(tmp_path / "store")
+    res1 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+
+    victim = camp.expand()[0]
+    path = RunStore(store_dir).cell_path(victim.spec_hash())
+    with open(path) as f:
+        text = f.read()
+    with open(path, "w") as f:
+        f.write(text[: len(text) // 2])  # truncate mid-payload
+
+    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+        res2 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    assert res2.executed == [victim.spec_hash()]  # only the corrupt cell
+    assert len(res2.skipped) == 1
+    for cell in camp.expand():
+        assert res2.front(cell.tag) == res1.front(cell.tag)
+
+    # The CLI resume path survives it too (no traceback, rc 0).
+    with open(path, "w") as f:
+        f.write("{definitely not json")
+    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+        rc = cli_main(["campaign", "resume", store_dir])
+    captured = capsys.readouterr()
+    assert rc == 0
+    assert "1 cells executed" in captured.out
+    assert "Traceback" not in captured.err
+
+
 def test_report_groups_split_by_objective_layout():
     camp = tiny_campaign(
         overrides=[

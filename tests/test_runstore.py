@@ -1,0 +1,197 @@
+"""RunStore concurrency hardening: atomic same-hash writer races, the
+advisory store lock, the claim protocol (exclusivity, heartbeat, stale
+takeover, owner release), and corruption-tolerant loads."""
+import json
+import multiprocessing
+import os
+import time
+
+import pytest
+
+from repro.core.runstore import RunStore
+
+
+HASH = "a" * 64
+
+
+# ------------------------------------------------------------ writer races
+def _hammer_writes(root, payload_id, n, start_evt):
+    store = RunStore(root)
+    start_evt.wait()
+    for i in range(n):
+        store.save_cell(HASH, {"writer": payload_id, "i": i, "pad": "x" * 2048})
+
+
+@pytest.mark.parametrize("n_writers", [2])
+def test_same_hash_concurrent_writers_never_tear(tmp_path, n_writers):
+    """Two processes replaying the same cell hash race safely through
+    ``os.replace``: at every instant the artifact is complete, valid JSON
+    from exactly one writer — no torn or interleaved bytes."""
+    root = str(tmp_path / "store")
+    ctx = multiprocessing.get_context()
+    start = ctx.Event()
+    n = 60
+    procs = [
+        ctx.Process(target=_hammer_writes, args=(root, w, n, start))
+        for w in range(n_writers)
+    ]
+    for p in procs:
+        p.start()
+    store = RunStore(root)
+    start.set()
+    observed = 0
+    deadline = time.monotonic() + 60
+    while any(p.is_alive() for p in procs) and time.monotonic() < deadline:
+        art = store.try_load_cell(HASH)
+        if art is not None:
+            assert art["writer"] in range(n_writers)
+            assert len(art["pad"]) == 2048
+            observed += 1
+    for p in procs:
+        p.join(timeout=30)
+        assert p.exitcode == 0
+    # One winner, fully intact.
+    final = store.load_cell(HASH)
+    assert final["writer"] in range(n_writers) and final["i"] == n - 1
+    assert observed > 0  # the reader really raced the writers
+    # No temp-file litter from the atomic writes.
+    leftovers = [
+        f for f in os.listdir(os.path.join(root, "cells")) if ".tmp." in f
+    ]
+    assert leftovers == []
+
+
+# ----------------------------------------------------------------- claims
+def _try_claim(root, owner, start_evt, out_q):
+    store = RunStore(root)
+    start_evt.wait()
+    out_q.put((owner, store.claim(HASH, owner)))
+
+
+def test_claim_exclusive_across_processes(tmp_path):
+    """O_CREAT|O_EXCL arbitration: of N processes claiming one hash at
+    the same instant, exactly one wins."""
+    root = str(tmp_path / "store")
+    ctx = multiprocessing.get_context()
+    start, out_q = ctx.Event(), ctx.Queue()
+    procs = [
+        ctx.Process(target=_try_claim, args=(root, f"w{i}", start, out_q))
+        for i in range(4)
+    ]
+    for p in procs:
+        p.start()
+    start.set()
+    results = [out_q.get(timeout=30) for _ in procs]
+    for p in procs:
+        p.join(timeout=30)
+    winners = [owner for owner, won in results if won]
+    assert len(winners) == 1
+    info = RunStore(root).claim_info(HASH)
+    assert info["owner"] == winners[0]
+
+
+def test_claim_lifecycle_and_stale_takeover(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    assert store.claim(HASH, "alice")
+    assert not store.claim(HASH, "bob")          # held
+    assert not store.claim(HASH, "bob", ttl_s=60)  # held and fresh
+    # Age the claim past the TTL: bob takes over.
+    old = time.time() - 120
+    os.utime(store.claim_path(HASH), (old, old))
+    assert store.claim(HASH, "bob", ttl_s=60)
+    assert store.claim_info(HASH)["owner"] == "bob"
+    # A heartbeat refresh prevents takeover.
+    old = time.time() - 50
+    os.utime(store.claim_path(HASH), (old, old))
+    store.refresh_claim(HASH, "bob")
+    assert not store.claim(HASH, "carol", ttl_s=60)
+    store.release_claim(HASH)
+    assert store.claim_info(HASH) is None
+    assert store.claim(HASH, "carol")
+
+
+def test_claim_refused_once_artifact_exists(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    store.save_cell(HASH, {"done": True})
+    assert not store.claim(HASH, "anyone")
+
+
+def test_corrupt_artifact_does_not_block_claim(tmp_path):
+    """A corrupt artifact counts as missing for loads, so it must count
+    as missing for claims too — otherwise the re-executing worker parks
+    on it forever (claim refused by the file it needs to replace)."""
+    store = RunStore(str(tmp_path / "store"))
+    store.save_cell(HASH, {"run": {}})
+    with open(store.cell_path(HASH), "w") as f:
+        f.write("{torn")
+    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+        assert store.claim(HASH, "healer")
+    store.save_cell(HASH, {"run": {"front": []}})  # healed
+    store.release_claim(HASH)
+    assert not store.claim(HASH, "anyone")  # valid artifact refuses again
+
+
+def test_release_claims_of_owner(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    h2 = "b" * 64
+    assert store.claim(HASH, "dead-worker")
+    assert store.claim(h2, "live-worker")
+    released = store.release_claims_of("dead-worker")
+    assert released == [HASH]
+    assert store.claim_info(HASH) is None
+    assert store.claim_info(h2)["owner"] == "live-worker"
+
+
+def test_claims_in_memory_store():
+    store = RunStore(None)
+    assert store.claim(HASH, "a")
+    assert not store.claim(HASH, "b")
+    store.release_claim(HASH)
+    assert store.claim(HASH, "b")
+    store.save_cell(HASH, {"x": 1})
+    store.release_claim(HASH)
+    assert not store.claim(HASH, "c")  # artifact exists
+
+
+# ------------------------------------------------------------------- locks
+def _hold_lock(root, acquired, release):
+    store = RunStore(root)
+    with store.lock():
+        acquired.set()
+        release.wait()
+
+
+def test_store_lock_is_exclusive_across_processes(tmp_path):
+    root = str(tmp_path / "store")
+    ctx = multiprocessing.get_context()
+    acquired, release = ctx.Event(), ctx.Event()
+    p = ctx.Process(target=_hold_lock, args=(root, acquired, release))
+    p.start()
+    assert acquired.wait(timeout=30)
+    import fcntl
+
+    fd = os.open(os.path.join(root, ".lock"), os.O_RDWR)
+    with pytest.raises(BlockingIOError):
+        fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+    release.set()
+    p.join(timeout=30)
+    fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)  # free after release
+    fcntl.flock(fd, fcntl.LOCK_UN)
+    os.close(fd)
+
+
+# ------------------------------------------------------ corrupt artifacts
+def test_try_load_cell_corrupt_warns_and_returns_none(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    store.save_cell(HASH, {"run": {"front": [[1, 2, 3]]}})
+    # Truncate the artifact mid-payload (simulated torn write / bad disk).
+    path = store.cell_path(HASH)
+    with open(path) as f:
+        text = f.read()
+    with open(path, "w") as f:
+        f.write(text[: len(text) // 2])
+    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+        assert store.try_load_cell(HASH) is None
+    with pytest.raises(json.JSONDecodeError):
+        store.load_cell(HASH)  # the strict loader still raises
+    assert store.try_load_cell("f" * 64) is None  # plain missing: no warning
