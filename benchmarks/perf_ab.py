@@ -35,6 +35,27 @@ from repro.data import batch_specs
 PEAK, HBM, ICI = 197e12, 819e9, 50e9
 
 
+def bench_provenance():
+    """Git SHA + hostname stamped into every BENCH_*.json write, so
+    history entries from different machines/commits stay attributable
+    (the ±20% regression gates compare against the last entry — knowing
+    *where* that entry came from is what makes a gate trip actionable)."""
+    import socket
+    import subprocess
+
+    sha = None
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        sha = out.stdout.strip() or None
+    except Exception:
+        pass
+    return {"git_sha": sha, "host": socket.gethostname()}
+
+
 def lower_train(arch: str, *, ce_mode="onehot", microbatches=None, seq=4096, batch=256):
     spec = get_config(arch)
     cfg = spec.model
@@ -211,9 +232,12 @@ def dse_cache_ab(repeats: int = 5):
                 "arms": prev.get("arms"),
                 "speedups": prev_speedups,
                 "fronts_identical": prev.get("fronts_identical"),
+                "git_sha": prev.get("git_sha"),
+                "host": prev.get("host"),
             }
         )
     bench = {
+        **bench_provenance(),
         "experiment": "dse_cache",
         "config": {"population": 24, "offspring": 10, "generations": 30,
                    "seed": 11, "strategies": list(strategies),
@@ -379,9 +403,11 @@ def sim_backends_ab(batch: int = 64, repeats: int = 3):
     history = list(prev.get("history", [])) if prev else []
     if prev:
         history.append(
-            {k: prev.get(k) for k in ("arms", "speedups", "periods_identical")}
+            {k: prev.get(k) for k in ("arms", "speedups", "periods_identical",
+                                      "git_sha", "host")}
         )
     bench = {
+        **bench_provenance(),
         "experiment": "sim_backends",
         "config": {"app": "Sobel", "xi": "MRB_Always", "batch": batch,
                    "repeats": repeats, "iterations": cfg.iterations,
@@ -548,9 +574,11 @@ def service_ab(seeds: int = 3, workers: int = 2, repeats: int = 2):
     history = list(prev.get("history", [])) if prev else []
     if prev:
         history.append(
-            {k: prev.get(k) for k in ("arms", "speedups", "fronts_identical")}
+            {k: prev.get(k) for k in ("arms", "speedups", "fronts_identical",
+                                      "git_sha", "host")}
         )
     bench = {
+        **bench_provenance(),
         "experiment": "service",
         "config": {"family": "stencil_chain", "strategies": 2, "seeds": seeds,
                    "tenants": len(tenants), "workers": workers,

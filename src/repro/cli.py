@@ -20,6 +20,9 @@ inspecting experiments (see README "Campaign API").
     python -m repro sim verify [--families a,b] [--sizes standard] [--decoders ...]
                                [--per-family 1] [--samples 3] [--seed 0]
                                [--harmonic] [--out report.json]
+    python -m repro trace export [--obs-dir DIR] [--out trace.json]
+                                 [--min-cats N]
+    python -m repro trace summary [--obs-dir DIR] [--top N]
 
 Campaign specs are :class:`repro.core.campaign.Campaign` JSON; the store
 layout under ``--root`` (default ``runs/campaigns/``) is documented in
@@ -379,6 +382,50 @@ def _cmd_sim_verify(args) -> int:
     return 0 if report["ok"] else 1
 
 
+# -------------------------------------------------------------------- trace
+def _cmd_trace_export(args) -> int:
+    """Merge the REPRO_OBS sinks into one Chrome-trace/Perfetto JSON."""
+    from . import obs
+
+    obs_dir = args.obs_dir or obs.default_obs_dir()
+    out = args.out or os.path.join(obs_dir, "trace.json")
+    trace = obs.export_chrome_trace(obs_dir, out)
+    info = obs.validate_chrome_trace(trace)
+    if not info["events"]:
+        raise RuntimeError(
+            f"no telemetry records under {obs_dir!r} "
+            f"(run with REPRO_OBS=1, or pass --obs-dir)"
+        )
+    print(
+        f"trace -> {out}: {info['events']} events, {info['spans']} spans, "
+        f"{len(info['pids'])} process(es), "
+        f"subsystems: {', '.join(info['cats'])}"
+    )
+    if args.min_cats and len(info["cats"]) < args.min_cats:
+        print(
+            f"repro: trace export: only {len(info['cats'])} subsystem(s) "
+            f"({', '.join(info['cats'])}), expected >= {args.min_cats}",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+def _cmd_trace_summary(args) -> int:
+    """Aggregate recorded spans into a per-name self-time table."""
+    from . import obs
+
+    obs_dir = args.obs_dir or obs.default_obs_dir()
+    summary = obs.summarize(obs_dir)
+    if not summary["spans"] and not summary["counters"]:
+        raise RuntimeError(
+            f"no telemetry records under {obs_dir!r} "
+            f"(run with REPRO_OBS=1, or pass --obs-dir)"
+        )
+    print(obs.format_summary(summary, top=args.top))
+    return 0
+
+
 # --------------------------------------------------------------------- main
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="repro", description=__doc__)
@@ -471,6 +518,22 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="harmonize scenarios (pow2 times, uniform tokens)")
     p.add_argument("--out", default="", help="write the JSON report here")
     p.set_defaults(fn=_cmd_sim_verify)
+
+    tr = sub.add_parser("trace", help="telemetry (REPRO_OBS) trace tooling")
+    tsub = tr.add_subparsers(dest="action", required=True)
+    p = tsub.add_parser(
+        "export", help="merge obs sinks into one Chrome-trace/Perfetto JSON"
+    )
+    p.add_argument("--obs-dir", default="", dest="obs_dir",
+                   help="sink directory (default: the REPRO_OBS selection)")
+    p.add_argument("--out", default="", help="output path (default: <obs-dir>/trace.json)")
+    p.add_argument("--min-cats", type=int, default=0, dest="min_cats",
+                   help="fail unless spans from at least N subsystems are present")
+    p.set_defaults(fn=_cmd_trace_export)
+    p = tsub.add_parser("summary", help="aggregate spans into a self-time table")
+    p.add_argument("--obs-dir", default="", dest="obs_dir")
+    p.add_argument("--top", type=int, default=0, help="show only the top N spans")
+    p.set_defaults(fn=_cmd_trace_summary)
 
     args = ap.parse_args(argv)
     try:

@@ -46,6 +46,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .. import obs
 from .decoders import get_decoder
 from .dse import (
     Genotype,
@@ -336,10 +337,12 @@ class EvaluationEngine:
 
     def _transformed(self, xi: Tuple[int, ...]):
         if self._gt_lru_max <= 0:
-            return transformed_graph(self.space, xi, self.pipelined)
+            with obs.span("engine.transform", xi_ones=sum(xi), cached=False):
+                return transformed_graph(self.space, xi, self.pipelined)
         gt = self._gt_lru.get(xi)
         if gt is None:
-            gt = transformed_graph(self.space, xi, self.pipelined)
+            with obs.span("engine.transform", xi_ones=sum(xi), cached=False):
+                gt = transformed_graph(self.space, xi, self.pipelined)
             self._gt_lru[xi] = gt
             if len(self._gt_lru) > self._gt_lru_max:
                 self._gt_lru.popitem(last=False)
@@ -349,15 +352,18 @@ class EvaluationEngine:
 
     def _decode(self, genotype: Genotype) -> Individual:
         self.evaluations += 1
-        return evaluate_genotype(
-            self.space,
-            genotype,
-            decoder=self.decoder,
-            ilp_budget_s=self.ilp_budget_s,
-            pipelined=self.pipelined,
-            transformed=self._transformed(genotype.xi),
-            objectives=self._decode_objs,
-        )
+        with obs.span("engine.decode", decoder=self.decoder) as sp:
+            ind = evaluate_genotype(
+                self.space,
+                genotype,
+                decoder=self.decoder,
+                ilp_budget_s=self.ilp_budget_s,
+                pipelined=self.pipelined,
+                transformed=self._transformed(genotype.xi),
+                objectives=self._decode_objs,
+            )
+            sp.set(feasible=ind.feasible)
+            return ind
 
     def _patch_sim(self, inds: List[Individual]) -> List[Individual]:
         """Replace the deferred ``sim_period`` placeholders with measured
@@ -383,20 +389,29 @@ class EvaluationEngine:
             gt = self._transformed(xi)
             backend = self.sim_backend
             if backend == "auto":
-                backend = resolve_sim_backend(len(idxs), _task_count(gt))
+                n_tasks = _task_count(gt)
+                backend = resolve_sim_backend(len(idxs), n_tasks)
                 self.sim_backend_choices[backend] = (
                     self.sim_backend_choices.get(backend, 0) + 1
                 )
-            if backend in ("vectorized", "pallas"):
-                periods = batch_simulate_periods(
-                    gt, self.space.arch, [inds[i].schedule for i in idxs],
-                    self.sim_config, backend=backend,
+                obs.event(
+                    "engine.backend_resolved",
+                    backend=backend, batch=len(idxs), n_tasks=n_tasks,
                 )
-            else:
-                periods = [
-                    simulate_period(gt, self.space.arch, inds[i].schedule, self.sim_config)
-                    for i in idxs
-                ]
+            with obs.span(
+                "engine.sim_patch", backend=backend, batch=len(idxs),
+                xi_ones=sum(xi),
+            ):
+                if backend in ("vectorized", "pallas"):
+                    periods = batch_simulate_periods(
+                        gt, self.space.arch, [inds[i].schedule for i in idxs],
+                        self.sim_config, backend=backend,
+                    )
+                else:
+                    periods = [
+                        simulate_period(gt, self.space.arch, inds[i].schedule, self.sim_config)
+                        for i in idxs
+                    ]
             for i, p in zip(idxs, periods):
                 vec = list(out[i].objectives)
                 for j in sim_pos:
@@ -423,8 +438,10 @@ class EvaluationEngine:
         cached = self._cache.get(key)
         if cached is not None:
             self.hits += 1
+            obs.counter_add("engine.cache_hits")
             return self._wrap(genotype, cached)
         self.misses += 1
+        obs.counter_add("engine.cache_misses")
         ind = self._patch_sim([self._decode(genotype)])[0]
         self._store(key, ind)
         return ind
@@ -480,6 +497,8 @@ class EvaluationEngine:
         # decodes are misses, not hits.
         self.misses += len(miss_order) + fallback
         self.hits += len(genotypes) - len(miss_order) - fallback
+        obs.counter_add("engine.cache_misses", len(miss_order) + fallback)
+        obs.counter_add("engine.cache_hits", len(genotypes) - len(miss_order) - fallback)
         return out
 
     # ------------------------------------------------------------ reporting

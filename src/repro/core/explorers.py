@@ -29,6 +29,7 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Type, Union
 
+from .. import obs
 from .dse import DSEConfig, Genotype, Individual, Objectives, xi_mode
 from .pareto import (
     crowding_distance,
@@ -275,6 +276,14 @@ def _finalize_hypervolume(run: ExplorationRun) -> None:
         relative_hypervolume(nondominated(gen), final) if final else 0.0
         for gen in run.history
     ]
+    if run.hv_history:
+        obs.event(
+            "explorer.hypervolume",
+            explorer=run.explorer,
+            generations=len(run.hv_history),
+            relhv_final=run.hv_history[-1],
+            front=len(run.front),
+        )
 
 
 def _record_engine_meta(run: ExplorationRun, engine, choices0: Dict[str, int]) -> None:
@@ -382,30 +391,38 @@ class NSGA2Explorer:
             for gen in range(self.generations):
                 if self.time_budget_s and time.monotonic() - t0 > self.time_budget_s:
                     break
-                rank, crowd = rank_crowd(pop)
-                # Create the whole brood first (RNG order identical to
-                # evaluating one-by-one — evaluation never draws from rng),
-                # then decode as one memoized, possibly parallel batch.
-                children: List[Genotype] = []
-                for _ in range(self.offspring):
-                    p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
-                    child = (
-                        space.crossover(rng, p1.genotype, p2.genotype)
-                        if rng.random() < self.crossover_rate
-                        else p1.genotype
+                with obs.span(
+                    "explorer.generation", explorer=self.name, gen=gen
+                ) as sp:
+                    rank, crowd = rank_crowd(pop)
+                    # Create the whole brood first (RNG order identical to
+                    # evaluating one-by-one — evaluation never draws from
+                    # rng), then decode as one memoized, possibly parallel
+                    # batch.
+                    children: List[Genotype] = []
+                    for _ in range(self.offspring):
+                        p1, p2 = tournament(rank, crowd), tournament(rank, crowd)
+                        child = (
+                            space.crossover(rng, p1.genotype, p2.genotype)
+                            if rng.random() < self.crossover_rate
+                            else p1.genotype
+                        )
+                        children.append(fix(space.mutate(rng, child, xi_mode=mode)))
+                    offspring = engine.evaluate_batch(children)
+                    merged = pop + offspring
+                    rank2, crowd2 = rank_crowd(merged)
+                    # elitist μ+λ truncation by (rank, -crowding)
+                    order = sorted(
+                        range(len(merged)),
+                        key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
                     )
-                    children.append(fix(space.mutate(rng, child, xi_mode=mode)))
-                offspring = engine.evaluate_batch(children)
-                merged = pop + offspring
-                rank2, crowd2 = rank_crowd(merged)
-                # elitist μ+λ truncation by (rank, -crowding)
-                order = sorted(
-                    range(len(merged)),
-                    key=lambda i: (rank2[i], -crowd2.get(i, 0.0)),
-                )
-                pop = [merged[i] for i in order[: self.population]]
-                _update_archive(run, pop)
-                run.history.append([i.objectives for i in run.archive])
+                    pop = [merged[i] for i in order[: self.population]]
+                    _update_archive(run, pop)
+                    run.history.append([i.objectives for i in run.archive])
+                    sp.set(
+                        front=len(run.archive),
+                        evaluations=engine.evaluations - ev0,
+                    )
                 if on_generation:
                     run.wall_s = time.monotonic() - t0
                     on_generation(gen, run)
@@ -486,12 +503,16 @@ class RandomSearchExplorer:
                 if self.time_budget_s and time.monotonic() - t0 > self.time_budget_s:
                     break
                 n = min(self.batch, remaining)
-                batch = engine.evaluate_batch(
-                    [fix(space.random(rng, mode)) for _ in range(n)]
-                )
-                remaining -= n
-                _update_archive(run, batch)
-                run.history.append([i.objectives for i in run.archive])
+                with obs.span(
+                    "explorer.generation", explorer=self.name, gen=gen, batch=n
+                ) as sp:
+                    batch = engine.evaluate_batch(
+                        [fix(space.random(rng, mode)) for _ in range(n)]
+                    )
+                    remaining -= n
+                    _update_archive(run, batch)
+                    run.history.append([i.objectives for i in run.archive])
+                    sp.set(front=len(run.archive))
                 if on_generation:
                     run.wall_s = time.monotonic() - t0
                     on_generation(gen, run)

@@ -37,7 +37,6 @@ import json
 import os
 import tempfile
 import time
-import warnings
 from typing import Any, Dict, Iterator, List, Optional
 
 try:  # POSIX only; the claim protocol itself never needs it, the
@@ -45,7 +44,11 @@ try:  # POSIX only; the claim protocol itself never needs it, the
 except ImportError:  # pragma: no cover
     fcntl = None  # type: ignore[assignment]
 
+from .. import obs
+
 __all__ = ["RunStore", "canonical_json", "list_campaign_dirs"]
+
+_log = obs.get_logger("runstore")
 
 MANIFEST = "manifest.json"
 REPORT = "report.json"
@@ -169,6 +172,10 @@ class RunStore:
                     fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o666)
                 except FileExistsError:
                     return False
+                obs.event(
+                    "runstore.claim_stale_break",
+                    spec=spec_hash[:12], owner=owner, age_s=round(age, 3),
+                )
         with os.fdopen(fd, "w") as f:
             f.write(payload)
         return True
@@ -292,12 +299,12 @@ class RunStore:
         try:
             return json.loads(text)
         except ValueError:
-            warnings.warn(
-                f"corrupt cell artifact {self.cell_path(spec_hash)} — "
-                f"treating as missing (will re-execute)",
-                RuntimeWarning,
-                stacklevel=2,
+            _log.warning(
+                "corrupt cell artifact %s — treating as missing "
+                "(will re-execute)",
+                self.cell_path(spec_hash),
             )
+            obs.event("runstore.corrupt_artifact", spec=spec_hash[:12])
             return None
 
     def delete_cell(self, spec_hash: str) -> None:

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import obs
 from .ops import on_tpu
 
 __all__ = ["build_pallas_sim"]
@@ -54,11 +55,13 @@ def build_pallas_sim(
     """
     from ..sim.vectorized import build_simulate_one
 
-    simulate_one, tables = build_simulate_one(static, ports, int(k_max))
+    with obs.span("sim.pallas_build", k_max=int(k_max)):
+        simulate_one, tables = build_simulate_one(static, ports, int(k_max))
     A, C, H, P, Tmax = (static[k] for k in ("A", "C", "H", "P", "Tmax"))
     K_MAX = int(k_max)
     if interpret is None:
         interpret = not on_tpu()
+    obs.counter_add("sim.pallas_builds", interpret=bool(interpret))
 
     def kernel(k_ref, *refs):
         # refs: one per structure table (shared across cells), then the

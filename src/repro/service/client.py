@@ -81,6 +81,20 @@ class ServiceClient:
     def metrics(self) -> Dict[str, Any]:
         return self._request("/metrics")
 
+    def metrics_text(self) -> str:
+        """The Prometheus text exposition of ``/metrics`` (same values as
+        the JSON endpoint, negotiated via ``Accept: text/plain``)."""
+        req = urllib.request.Request(
+            self.base_url + "/metrics", headers={"Accept": "text/plain"}
+        )
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return resp.read().decode()
+        except urllib.error.HTTPError as e:
+            raise ServiceError(e.code, str(e)) from None
+        except urllib.error.URLError as e:
+            raise ServiceError(0, f"cannot reach {self.base_url}: {e.reason}") from None
+
     def events(
         self, submission_id: str, *, since: int = 0
     ) -> Iterator[Dict[str, Any]]:

@@ -46,9 +46,12 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from .. import obs
 from ..core.runstore import RunStore
 
 __all__ = ["SchedulerConfig", "WorkUnit", "Scheduler", "run_groups_local"]
+
+_log = obs.get_logger("service.scheduler")
 
 # Test-only hook: sleep this many seconds inside the worker after a cell
 # is claimed and announced, before decoding — gives kill/retry tests a
@@ -102,17 +105,20 @@ def _execute_unit(
     emit: Optional[Callable[[Dict[str, Any]], None]] = None,
     on_claim: Optional[Callable[[str, bool], None]] = None,
     poll_s: float = 0.05,
+    attrs: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
     """Execute one engine-sharing group of :class:`CampaignCell`\\ s
     against ``store`` with the claim/dedup protocol.  Returns
     ``{"executed": [hash...], "deduped": [hash...], "cells": [stats...]}``.
     ``on_claim(hash, held)`` tells the caller's heartbeat thread which
-    claims to keep refreshed."""
+    claims to keep refreshed.  ``attrs`` (unit/campaign/tenant identity)
+    is stamped onto every telemetry span and event this unit records."""
     from ..core.campaign import run_cell
     from ..core.problem import ExplorationProblem
 
     emit = emit or (lambda e: None)
     on_claim = on_claim or (lambda h, held: None)
+    attrs = dict(attrs or {})
     delay = float(os.environ.get(CELL_DELAY_ENV, "0") or 0.0)
     engine = None
     executed: List[str] = []
@@ -127,13 +133,16 @@ def _execute_unit(
             time.sleep(delay)
         t0 = time.monotonic()
         try:
-            if engine is None:
-                problem = ExplorationProblem.from_json(cell.problem)
-                engine = problem.make_engine(
-                    **{**cell.engine, **(engine_overrides or {})}
-                )
-            art = run_cell(cell, engine=engine)
-            store.save_cell(h, art)
+            with obs.span(
+                "service.cell", spec=h[:12], tag=cell.tag, **attrs
+            ):
+                if engine is None:
+                    problem = ExplorationProblem.from_json(cell.problem)
+                    engine = problem.make_engine(
+                        **{**cell.engine, **(engine_overrides or {})}
+                    )
+                art = run_cell(cell, engine=engine)
+                store.save_cell(h, art)
         finally:
             store.release_claim(h)
             on_claim(h, False)
@@ -157,36 +166,52 @@ def _execute_unit(
         )
 
     try:
-        for cell in cells:
-            h = cell.spec_hash()
-            if store.try_load_cell(h) is not None:
-                deduped.append(h)
-                emit({"type": "cell_dedup", "spec_hash": h, "tag": cell.tag})
-                continue
-            if not store.claim(h, owner, ttl_s=claim_ttl_s):
-                # Another worker is decoding this hash right now — park
-                # the cell and come back once the rest of the group ran.
-                parked.append(cell)
-                emit({"type": "cell_wait", "spec_hash": h, "tag": cell.tag})
-                continue
-            on_claim(h, True)
-            run_one(cell, h)
-        for cell in parked:
-            h = cell.spec_hash()
-            wait_s = poll_s
-            while True:
+        with obs.span("service.unit", n_cells=len(cells), **attrs) as usp:
+            for cell in cells:
+                h = cell.spec_hash()
                 if store.try_load_cell(h) is not None:
                     deduped.append(h)
+                    obs.counter_add("service.cells_deduped", **attrs)
                     emit({"type": "cell_dedup", "spec_hash": h, "tag": cell.tag})
-                    break
-                if store.claim(h, owner, ttl_s=claim_ttl_s):
-                    # The original claimant died; its stale claim timed
-                    # out and we inherit the work.
-                    on_claim(h, True)
-                    run_one(cell, h)
-                    break
-                time.sleep(wait_s)
-                wait_s = min(wait_s * 2, 0.5)
+                    continue
+                if not store.claim(h, owner, ttl_s=claim_ttl_s):
+                    # Another worker is decoding this hash right now — park
+                    # the cell and come back once the rest of the group ran.
+                    parked.append(cell)
+                    obs.event(
+                        "service.claim_contention", spec=h[:12], **attrs
+                    )
+                    emit({"type": "cell_wait", "spec_hash": h, "tag": cell.tag})
+                    continue
+                on_claim(h, True)
+                run_one(cell, h)
+            for cell in parked:
+                h = cell.spec_hash()
+                wait_s = poll_s
+                with obs.span(
+                    "service.claim_wait", spec=h[:12], **attrs
+                ) as wsp:
+                    while True:
+                        if store.try_load_cell(h) is not None:
+                            deduped.append(h)
+                            obs.counter_add("service.cells_deduped", **attrs)
+                            wsp.set(outcome="dedup")
+                            emit({"type": "cell_dedup", "spec_hash": h,
+                                  "tag": cell.tag})
+                            break
+                        if store.claim(h, owner, ttl_s=claim_ttl_s):
+                            # The original claimant died; its stale claim
+                            # timed out and we inherit the work.
+                            obs.event(
+                                "service.stale_takeover", spec=h[:12], **attrs
+                            )
+                            wsp.set(outcome="stale_takeover")
+                            on_claim(h, True)
+                            run_one(cell, h)
+                            break
+                        time.sleep(wait_s)
+                        wait_s = min(wait_s * 2, 0.5)
+            usp.set(executed=len(executed), deduped=len(deduped))
     finally:
         if engine is not None:
             engine.close()
@@ -202,6 +227,7 @@ def _worker_main(wid: int, owner: str, task_q, result_q, cell_root: Optional[str
     (and refresh held claims) from a side thread so a long decode never
     looks dead."""
     store = RunStore(cell_root)
+    obs.set_process_name(f"worker-{wid}")
     held: set = set()
     held_lock = threading.Lock()
     stop = threading.Event()
@@ -250,6 +276,8 @@ def _worker_main(wid: int, owner: str, task_q, result_q, cell_root: Optional[str
                 emit=emit,
                 on_claim=on_claim,
                 poll_s=payload.get("claim_poll_s", 0.05),
+                attrs={"unit": unit_id, "campaign": payload["campaign_id"],
+                       "tenant": payload["tenant"], "worker": wid},
             )
             result_q.put(("unit_done", wid, unit_id, out))
         except BaseException as e:  # noqa: BLE001 — report, don't die
@@ -257,8 +285,12 @@ def _worker_main(wid: int, owner: str, task_q, result_q, cell_root: Optional[str
                 ("unit_error", wid, unit_id,
                  "".join(traceback.format_exception_only(type(e), e)).strip())
             )
+        # Flush per unit: the parent may terminate() this process on
+        # shutdown, which skips atexit — unflushed spans would be lost.
+        obs.flush()
         result_q.put(("ready", wid))
     stop.set()
+    obs.flush()
 
 
 class _WorkerHandle:
@@ -360,6 +392,7 @@ class Scheduler:
         if self._collector is not None:
             self._collector.join(timeout=timeout_s)
             self._collector = None
+        obs.flush()
 
     # ------------------------------------------------------------- submit
     def submit(
@@ -461,6 +494,13 @@ class Scheduler:
             t = self._tenant(unit.tenant)
             t["queued_units"] -= 1
             t["running_units"] += 1
+            obs.event(
+                "service.queue_wait",
+                unit=unit.unit_id, campaign=unit.campaign_id,
+                tenant=unit.tenant, worker=wid,
+                wait_s=round(time.monotonic() - unit.enqueued_at, 6),
+                attempt=unit.attempts,
+            )
             handle.task_q.put(
                 ("unit",
                  {"unit_id": unit.unit_id, "campaign_id": unit.campaign_id,
@@ -591,9 +631,13 @@ class Scheduler:
                 if wid in self._idle:
                     self._idle.remove(wid)
                 self._counters["worker_restarts"] += 1
+                reason = "dead" if dead else "heartbeat_timeout"
+                _log.warning(
+                    "worker %d (%s) replaced: %s", wid, old_owner, reason
+                )
+                obs.event("service.worker_restart", worker=wid, reason=reason)
                 self._event(
-                    {"type": "worker_restart", "worker": wid,
-                     "reason": "dead" if dead else "heartbeat_timeout"}
+                    {"type": "worker_restart", "worker": wid, "reason": reason}
                 )
                 # The dead worker's claims would otherwise block everyone
                 # until the TTL; release them now.
@@ -610,6 +654,11 @@ class Scheduler:
                         )
                     else:
                         self._counters["retries"] += 1
+                        obs.event(
+                            "service.unit_retry", unit=unit.unit_id,
+                            campaign=unit.campaign_id, tenant=unit.tenant,
+                            attempt=unit.attempts,
+                        )
                         unit.not_before = (
                             time.monotonic()
                             + self.cfg.backoff_base_s * 2 ** (unit.attempts - 1)
@@ -689,6 +738,8 @@ class Scheduler:
                     claim_ttl_s=self.cfg.claim_ttl_s,
                     emit=emit,
                     poll_s=self.cfg.claim_poll_s,
+                    attrs={"unit": unit.unit_id, "campaign": unit.campaign_id,
+                           "tenant": unit.tenant, "inline": True},
                 )
             except BaseException:
                 with self._lock:
@@ -724,6 +775,9 @@ class Scheduler:
             }
             return {
                 "queue_depth": len(self._queue),
+                "inflight": sum(
+                    1 for h in self._workers.values() if h.current is not None
+                ),
                 "counters": dict(self._counters),
                 "dedup_hit_rate": (deduped / total) if total else 0.0,
                 "tenants": {t: dict(s) for t, s in self._tenants.items()},

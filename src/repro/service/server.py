@@ -20,7 +20,9 @@ Endpoints (all JSON):
   ``cell_done`` / ``cell_dedup`` / ``unit_retry`` / ...), held open until
   the campaign finishes, then a final ``{"type": "stream_end"}`` line.
 * ``GET /metrics`` — queue depth, dedup hit rate, per-tenant throughput,
-  per-backend decode/sim timing, worker health, retry counters.
+  per-backend decode/sim timing, worker health, retry counters.  With
+  ``Accept: text/plain`` the same values are served in Prometheus text
+  exposition format (a fleet scrape target).
 
 Served campaigns are bit-identical to local ``CampaignRunner`` runs of
 the same specs: the manifest, cell artifacts, and report formats are the
@@ -35,11 +37,14 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, urlparse
 
+from .. import obs
 from ..core.campaign import Campaign, build_report
 from .scheduler import Scheduler, SchedulerConfig
 from .store import DEFAULT_SERVICE_ROOT, GlobalStore
 
 __all__ = ["CampaignService", "serve", "make_server"]
+
+_access_log = obs.get_logger("service.access")
 
 
 class CampaignService:
@@ -193,13 +198,24 @@ class _Handler(BaseHTTPRequestHandler):
     service: CampaignService = None  # patched in by make_server
 
     # ------------------------------------------------------------- plumbing
-    def log_message(self, fmt, *args):  # quiet by default (tests, CI)
-        pass
+    def log_message(self, fmt, *args):
+        # Quiet by default (tests, CI); REPRO_SERVICE_LOG=1 routes the
+        # access log through the repro.service.access logger.
+        if obs.access_log_enabled():
+            _access_log.info("%s %s", self.address_string(), fmt % args)
 
     def _send_json(self, payload: Any, code: int = 200) -> None:
         body = (json.dumps(payload, sort_keys=True) + "\n").encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_text(self, text: str, content_type: str, code: int = 200) -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -215,7 +231,17 @@ class _Handler(BaseHTTPRequestHandler):
             if parts == ["healthz"]:
                 self._send_json({"ok": True})
             elif parts == ["metrics"]:
-                self._send_json(self.service.metrics())
+                # Content negotiation: JSON by default (dashboards,
+                # existing clients); Prometheus text exposition when the
+                # scraper asks for text/plain (same values, one source).
+                accept = self.headers.get("Accept", "")
+                if "text/plain" in accept and "application/json" not in accept:
+                    self._send_text(
+                        obs.prometheus_text(self.service.metrics()),
+                        obs.PROM_CONTENT_TYPE,
+                    )
+                else:
+                    self._send_json(self.service.metrics())
             elif parts == ["campaigns"]:
                 self._send_json({"submissions": self.service.submissions()})
             elif len(parts) == 2 and parts[0] == "campaigns":

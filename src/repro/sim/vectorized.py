@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.architecture import ArchitectureGraph
 from ..core.graph import ApplicationGraph
 from ..core.schedule import Schedule
@@ -582,14 +583,16 @@ def _get_compiled(
     full_key = (key, backend, donate)
     fn = _COMPILED.get(full_key)
     if fn is None:
-        _wire_fast_cpu()
-        _wire_persistent_cache()
-        if backend == "pallas":
-            from ..kernels.sim_step import build_pallas_sim
+        with obs.span("sim.compile", backend=backend, k_max=int(k_max)):
+            _wire_fast_cpu()
+            _wire_persistent_cache()
+            if backend == "pallas":
+                from ..kernels.sim_step import build_pallas_sim
 
-            fn = build_pallas_sim(static, cfg.mrb_ports, k_max)
-        else:
-            fn = _build_sim(static, cfg, k_max, donate)
+                fn = build_pallas_sim(static, cfg.mrb_ports, k_max)
+            else:
+                fn = _build_sim(static, cfg, k_max, donate)
+        obs.counter_add("sim.cache_builds", backend=backend)
         _COMPILED[full_key] = fn
     return fn
 
@@ -624,7 +627,16 @@ def _run_batch(
     k_max = min(_bucket(max(2, total_iters)), cfg.max_iterations)
     key = (_structure_key(progs[0], cfg), Bb, k_max)
     fn = _get_compiled(static, key, cfg, k_max, backend, donate)
-    fire, dead, horizon = fn(*arrs, np.int32(total_iters))
+    traces0 = _TRACE_COUNT
+    with obs.span(
+        "sim.execute", backend=backend, B=B, Bb=Bb, k_max=int(k_max)
+    ) as sp:
+        fire, dead, horizon = fn(*arrs, np.int32(total_iters))
+        if _TRACE_COUNT != traces0:
+            # First call through a fresh compiled entry (or a shape-bucket
+            # retrace): this span's time is dominated by XLA compilation.
+            sp.set(retraced=True)
+            obs.counter_add("sim.retraces", backend=backend)
     return (
         np.asarray(fire)[:B],
         np.asarray(dead)[:B],
@@ -665,6 +677,7 @@ def batch_simulate(
         if predict_horizon(pr, cfg) > INT32_SAFE_HORIZON:
             from .events import simulate as ev_simulate
 
+            obs.counter_add("sim.int32_fallbacks", phase="predicted")
             out[i] = ev_simulate(g, arch, pr.schedule, _no_trace(cfg))
 
     remaining = [i for i, r in enumerate(out) if r is None]
@@ -685,6 +698,7 @@ def batch_simulate(
             ):
                 from .events import simulate as ev_simulate
 
+                obs.counter_add("sim.int32_fallbacks", phase="wrapped")
                 out[i] = ev_simulate(g, arch, progs[i].schedule, _no_trace(cfg))
                 continue
             ft = {
@@ -713,6 +727,11 @@ def batch_simulate(
                 )
             else:
                 still.append(i)
+        if still:
+            obs.event(
+                "sim.horizon_double", pending=len(still),
+                next_iters=min(cfg.max_iterations, iters * 2),
+            )
         remaining = still
         iters = min(cfg.max_iterations, iters * 2)
     return [r for r in out if r is not None]

@@ -199,7 +199,7 @@ def test_kill_resume_and_manifest_identity(tmp_path):
         assert res2.front(cell.tag) == res1.front(cell.tag)
 
 
-def test_resume_reexecutes_corrupt_cell_artifact(tmp_path, capsys):
+def test_resume_reexecutes_corrupt_cell_artifact(tmp_path, capsys, caplog):
     """A truncated ``cells/<hash>.json`` (torn disk, external meddling —
     our own writes are atomic) must resume as *missing*: warn and
     re-execute exactly that cell instead of dying in JSONDecodeError at
@@ -215,8 +215,9 @@ def test_resume_reexecutes_corrupt_cell_artifact(tmp_path, capsys):
     with open(path, "w") as f:
         f.write(text[: len(text) // 2])  # truncate mid-payload
 
-    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+    with caplog.at_level("WARNING", logger="repro.runstore"):
         res2 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    assert "corrupt cell artifact" in caplog.text
     assert res2.executed == [victim.spec_hash()]  # only the corrupt cell
     assert len(res2.skipped) == 1
     for cell in camp.expand():
@@ -225,8 +226,10 @@ def test_resume_reexecutes_corrupt_cell_artifact(tmp_path, capsys):
     # The CLI resume path survives it too (no traceback, rc 0).
     with open(path, "w") as f:
         f.write("{definitely not json")
-    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+    caplog.clear()
+    with caplog.at_level("WARNING", logger="repro.runstore"):
         rc = cli_main(["campaign", "resume", store_dir])
+    assert "corrupt cell artifact" in caplog.text
     captured = capsys.readouterr()
     assert rc == 0
     assert "1 cells executed" in captured.out

@@ -116,7 +116,7 @@ def test_claim_refused_once_artifact_exists(tmp_path):
     assert not store.claim(HASH, "anyone")
 
 
-def test_corrupt_artifact_does_not_block_claim(tmp_path):
+def test_corrupt_artifact_does_not_block_claim(tmp_path, caplog):
     """A corrupt artifact counts as missing for loads, so it must count
     as missing for claims too — otherwise the re-executing worker parks
     on it forever (claim refused by the file it needs to replace)."""
@@ -124,8 +124,9 @@ def test_corrupt_artifact_does_not_block_claim(tmp_path):
     store.save_cell(HASH, {"run": {}})
     with open(store.cell_path(HASH), "w") as f:
         f.write("{torn")
-    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+    with caplog.at_level("WARNING", logger="repro.runstore"):
         assert store.claim(HASH, "healer")
+    assert "corrupt cell artifact" in caplog.text
     store.save_cell(HASH, {"run": {"front": []}})  # healed
     store.release_claim(HASH)
     assert not store.claim(HASH, "anyone")  # valid artifact refuses again
@@ -181,7 +182,7 @@ def test_store_lock_is_exclusive_across_processes(tmp_path):
 
 
 # ------------------------------------------------------ corrupt artifacts
-def test_try_load_cell_corrupt_warns_and_returns_none(tmp_path):
+def test_try_load_cell_corrupt_warns_and_returns_none(tmp_path, caplog):
     store = RunStore(str(tmp_path / "store"))
     store.save_cell(HASH, {"run": {"front": [[1, 2, 3]]}})
     # Truncate the artifact mid-payload (simulated torn write / bad disk).
@@ -190,8 +191,11 @@ def test_try_load_cell_corrupt_warns_and_returns_none(tmp_path):
         text = f.read()
     with open(path, "w") as f:
         f.write(text[: len(text) // 2])
-    with pytest.warns(RuntimeWarning, match="corrupt cell artifact"):
+    with caplog.at_level("WARNING", logger="repro.runstore"):
         assert store.try_load_cell(HASH) is None
+    assert "corrupt cell artifact" in caplog.text
     with pytest.raises(json.JSONDecodeError):
         store.load_cell(HASH)  # the strict loader still raises
+    caplog.clear()
     assert store.try_load_cell("f" * 64) is None  # plain missing: no warning
+    assert "corrupt cell artifact" not in caplog.text

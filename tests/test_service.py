@@ -1,12 +1,14 @@
 """Campaign service: scheduler scoring/fairness, claim-based dedup,
 worker supervision (SIGKILL retry, bounded retries), the HTTP/JSON API
-end-to-end (concurrent tenants, streaming events, metrics), and the CLI
-error paths."""
+end-to-end (concurrent tenants, streaming events, metrics, Prometheus
+exposition, event pagination), and the CLI error paths."""
 import json
 import os
+import re
 import signal
 import threading
 import time
+import urllib.request
 
 import pytest
 
@@ -306,6 +308,169 @@ def test_http_error_paths(served):
     assert e.value.code == 400
     assert served.healthz() == {"ok": True}
     assert served.submissions() == []
+
+
+# ==================================================== observability surface
+@pytest.fixture()
+def served_inline(tmp_path):
+    """A served instance in inline mode (workers=0): submissions queue
+    until ``service.scheduler.drain()`` runs them in-process — cheap and
+    deterministic for surface tests that don't need a worker pool."""
+    server, service = make_server(str(tmp_path / "svc"), workers=0)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    host, port = server.server_address[:2]
+    client = ServiceClient(f"http://{host}:{port}")
+    try:
+        yield client, service
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.close()
+
+
+def test_metrics_json_schema_pinned(served_inline):
+    """The /metrics JSON shape is an API: dashboards, perf_ab, and the
+    Prometheus mapping in repro.obs.prom all consume it.  Pin every key
+    so a rename shows up here instead of in a silent scrape gap."""
+    client, service = served_inline
+    sub = client.submit(tiny_campaign().to_json(), tenant="alice")
+    service.scheduler.drain()
+    m = client.metrics()
+    assert set(m) == {
+        "uptime_s", "store", "queue_depth", "inflight", "counters",
+        "dedup_hit_rate", "tenants", "backend_timing", "workers", "campaigns",
+    }
+    assert m["uptime_s"] > 0
+    assert set(m["store"]) == {"unique_cells", "submissions"}
+    assert set(m["counters"]) == {
+        "units_submitted", "units_done", "units_failed", "retries",
+        "worker_restarts", "cells_executed", "cells_deduped",
+    }
+    assert set(m["tenants"]["alice"]) == {
+        "queued_units", "running_units", "submitted_cells",
+        "executed_cells", "deduped_cells", "wall_s",
+    }
+    assert m["backend_timing"], "a drained campaign must report timing"
+    for stats in m["backend_timing"].values():
+        assert set(stats) == {"cells", "wall_s_total", "wall_s_mean"}
+    row = m["campaigns"][sub["submission_id"]]
+    assert set(row) == {"pending_units", "tenant", "executed", "deduped", "errors"}
+    assert m["workers"] == []  # inline mode has no worker processes
+    assert m["queue_depth"] == 0 and m["inflight"] == 0
+
+
+_PROM_LINE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})? (\S+)$")
+
+
+def _parse_prom(text):
+    """Parse exposition text into ``{(name, labels): value}`` + declared
+    types, asserting the format invariants a real scraper relies on."""
+    samples, types = {}, {}
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            assert name not in types, f"duplicate TYPE for {name}"
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        match = _PROM_LINE.match(line)
+        assert match, f"malformed sample line: {line!r}"
+        name, labels_s, value = match.groups()
+        labels = ()
+        if labels_s:
+            labels = tuple(sorted(
+                (kv.split("=", 1)[0], kv.split("=", 1)[1].strip('"'))
+                for kv in labels_s.split(",")
+            ))
+        assert name in types, f"sample {name} missing TYPE declaration"
+        key = (name, labels)
+        assert key not in samples, f"duplicate sample {key}"
+        samples[key] = float(value)
+    return samples, types
+
+
+def test_prometheus_exposition_cross_checks_json(served_inline):
+    """Accept: text/plain serves Prometheus exposition whose every
+    sample matches the JSON endpoint — the two surfaces are one source."""
+    client, service = served_inline
+    camp = tiny_campaign()
+    client.submit(camp.to_json(), tenant="alice")
+    client.submit(camp.to_json(), tenant="bob")  # dedups against alice
+    service.scheduler.drain()
+
+    m = client.metrics()
+    text = client.metrics_text()
+    samples, types = _parse_prom(text)
+
+    assert samples[("repro_queue_depth", ())] == m["queue_depth"]
+    assert samples[("repro_inflight", ())] == m["inflight"]
+    assert samples[("repro_dedup_hit_rate", ())] == pytest.approx(m["dedup_hit_rate"])
+    assert m["dedup_hit_rate"] == pytest.approx(0.5)
+    assert samples[("repro_campaigns", ())] == len(m["campaigns"]) == 2
+    assert samples[("repro_uptime_seconds", ())] >= m["uptime_s"]
+
+    for name, v in m["counters"].items():
+        assert samples[(f"repro_{name}_total", ())] == v
+        assert types[f"repro_{name}_total"] == "counter"
+    for key, v in m["store"].items():
+        assert samples[(f"repro_store_{key}", ())] == v
+    for tenant, stats in m["tenants"].items():
+        for key, v in stats.items():
+            assert samples[(f"repro_tenant_{key}", (("tenant", tenant),))] == pytest.approx(v)
+    for backend, stats in m["backend_timing"].items():
+        lbl = (("backend", backend),)
+        assert samples[("repro_backend_cells_total", lbl)] == stats["cells"]
+        assert samples[("repro_backend_wall_seconds_total", lbl)] == pytest.approx(
+            stats["wall_s_total"]
+        )
+    assert samples[("repro_workers_alive", ())] == 0  # inline: no pool
+    assert samples[("repro_workers_total", ())] == 0
+
+    # Content negotiation: the scrape target advertises the exposition
+    # version; a client that also accepts JSON keeps getting JSON.
+    req = urllib.request.Request(
+        client.base_url + "/metrics", headers={"Accept": "text/plain"}
+    )
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        assert resp.headers["Content-Type"].startswith("text/plain; version=0.0.4")
+    req = urllib.request.Request(
+        client.base_url + "/metrics",
+        headers={"Accept": "text/plain, application/json"},
+    )
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        assert resp.headers["Content-Type"].startswith("application/json")
+        json.loads(resp.read().decode())
+
+
+def test_events_since_pagination_boundaries(served_inline):
+    client, service = served_inline
+    sid = client.submit(tiny_campaign().to_json(), tenant="alice")["submission_id"]
+    service.scheduler.drain()
+
+    full, end, done = service.events_since(sid, 0, timeout_s=0)
+    assert done and end == len(full) and len(full) >= 3
+    assert full[0]["type"] == "submitted"
+
+    # A middle page replays the exact suffix and lands on the same end.
+    page, nxt, done = service.events_since(sid, 2, timeout_s=0)
+    assert page == full[2:] and nxt == end and done
+    # since == end: empty page, index unchanged (the poll position).
+    page, nxt, done = service.events_since(sid, end, timeout_s=0)
+    assert page == [] and nxt == end and done
+    # since past the end is echoed back, not clamped — a stale client
+    # keeps a stable cursor instead of silently re-reading the tail.
+    page, nxt, done = service.events_since(sid, end + 5, timeout_s=0)
+    assert page == [] and nxt == end + 5 and done
+    # Unknown submission: no events, and "done" (nothing is scheduled).
+    page, nxt, done = service.events_since("ghost--none", 0, timeout_s=0)
+    assert page == [] and nxt == 0 and done
+
+    # The HTTP stream honours ?since=N: replay from 1 drops "submitted"
+    # and still terminates with the (consumed) stream_end line.
+    streamed = list(client.events(sid, since=1))
+    assert streamed == full[1:]
+    assert list(client.events(sid, since=end)) == []
 
 
 # ================================================================ CLI seam
