@@ -12,6 +12,8 @@ inspecting experiments (see README "Campaign API").
                                    [--stream] [--no-wait]
     python -m repro campaign status SUBMISSION_ID --url http://H:P
     python -m repro campaign metrics --url http://H:P
+    python -m repro chaos run [--spec SPEC.json] [--plans N] [--seed S]
+                              [--out DIR] [--workers N]
     python -m repro problem validate SPEC.json
     python -m repro problem explore SPEC.json [--explorer nsga2]
                                     [--params '{"generations": 8, ...}']
@@ -172,7 +174,11 @@ def _cmd_campaign_serve(args) -> int:
         host=args.host,
         port=args.port,
         workers=args.workers,
-        config=SchedulerConfig(max_retries=args.max_retries),
+        config=SchedulerConfig(
+            max_retries=args.max_retries,
+            unit_deadline_s=args.unit_deadline,
+        ),
+        queue_high_water=args.queue_high_water,
     )
     return 0
 
@@ -181,7 +187,10 @@ def _cmd_campaign_submit(args) -> int:
     from .service import ServiceClient
 
     campaign = Campaign.load(args.spec)
-    client = ServiceClient(args.url)
+    client = ServiceClient(
+        args.url,
+        timeout_s=args.timeout if args.timeout is not None else 30.0,
+    )
     sub = client.submit(
         campaign.to_json(), tenant=args.tenant, priority=args.priority
     )
@@ -230,6 +239,21 @@ def _cmd_campaign_metrics(args) -> int:
     m = ServiceClient(args.url).metrics()
     print(json.dumps(m, indent=2, sort_keys=True))
     return 0
+
+
+# -------------------------------------------------------------------- chaos
+def _cmd_chaos_run(args) -> int:
+    from .faults.chaos import chaos_run
+
+    report = chaos_run(
+        args.spec,
+        plans=args.plans,
+        seed=args.seed,
+        out_root=args.out,
+        workers=args.workers,
+        wait_timeout_s=args.timeout,
+    )
+    return 0 if report["ok"] else 1
 
 
 # ------------------------------------------------------------------ problem
@@ -460,6 +484,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--workers", type=int, default=2)
     p.add_argument("--max-retries", type=int, default=2, dest="max_retries",
                    help="per-unit retries after worker death")
+    p.add_argument("--unit-deadline", type=float, default=None,
+                   dest="unit_deadline",
+                   help="cancel any unit attempt running longer than this "
+                        "many seconds (default: no deadline)")
+    p.add_argument("--queue-high-water", type=int, default=None,
+                   dest="queue_high_water",
+                   help="reject submissions with 429 + Retry-After while "
+                        "this many units are queued (default: unbounded)")
     p.add_argument("--service-root", default=None, dest="service_root",
                    help="service store root (default runs/service)")
     p.set_defaults(fn=_cmd_campaign_serve)
@@ -482,6 +514,26 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = csub.add_parser("metrics", help="live service metrics (queue, dedup, tenants)")
     p.add_argument("--url", required=True)
     p.set_defaults(fn=_cmd_campaign_metrics)
+
+    ch = sub.add_parser("chaos", help="deterministic fault-injection sweeps")
+    chsub = ch.add_subparsers(dest="action", required=True)
+    p = chsub.add_parser(
+        "run",
+        help="N seeded fault plans over a campaign + convergence checker",
+    )
+    p.add_argument("--spec",
+                   default=os.path.join("benchmarks", "specs",
+                                        "campaign_smoke.json"),
+                   help="campaign spec to chaos-test (default: CI smoke)")
+    p.add_argument("--plans", type=int, default=20, help="fault plans to sweep")
+    p.add_argument("--seed", type=int, default=0,
+                   help="plan-generation seed (same seed, same plans)")
+    p.add_argument("--out", default=os.path.join("runs", "chaos"),
+                   help="scratch root for stores + the convergence report")
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--timeout", type=float, default=120.0,
+                   help="per-phase wait timeout in seconds")
+    p.set_defaults(fn=_cmd_chaos_run)
 
     prob = sub.add_parser("problem", help="single ExplorationProblem utilities")
     psub = prob.add_subparsers(dest="action", required=True)
@@ -536,10 +588,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.set_defaults(fn=_cmd_trace_summary)
 
     args = ap.parse_args(argv)
+    from .service.client import ServiceError
+
     try:
         return args.fn(args)
     except KeyboardInterrupt:
         return 130
+    except ServiceError as e:
+        # Retryable service failures (queue saturation 429, connection
+        # loss, 5xx after exhausted retries) get their own exit code so
+        # schedulers/scripts know a later resubmission can succeed.
+        print(f"repro: error: {e}", file=sys.stderr)
+        return 3 if e.retryable else 2
+    except TimeoutError as e:
+        print(f"repro: error: {e}", file=sys.stderr)
+        return 3
     except (OSError, ValueError, KeyError, RuntimeError) as e:
         # Expected operational failures (bad spec file, malformed JSON,
         # unknown registry name, unreachable service) get a one-line

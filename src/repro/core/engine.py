@@ -46,7 +46,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .. import obs
+from .. import faults, obs
 from .decoders import get_decoder
 from .dse import (
     Genotype,
@@ -280,6 +280,14 @@ class EvaluationEngine:
         # "auto" resolution counts, per concrete backend chosen (one count
         # per ξ-group patch) — surfaced in ExplorationRun.meta.
         self.sim_backend_choices: Dict[str, int] = {}
+        # Circuit breaker over the batched sim backends: the first
+        # vectorized/pallas failure opens the circuit for that backend
+        # for this engine's lifetime and every later ξ-group degrades to
+        # the event-driven reference backend.  Backend parity (enforced
+        # by the sim layer's conformance tests) makes the fallback
+        # value-identical — only throughput degrades, never results.
+        self._sim_breaker_open: set = set()
+        self.sim_degraded: Dict[str, int] = {}  # backend -> ξ-groups degraded
         self._decode_objs = tuple(
             _SIM_PERIOD_DEFERRED if (self._sim_defer and o.name == "sim_period") else o
             for o in self.objectives
@@ -402,12 +410,30 @@ class EvaluationEngine:
                 "engine.sim_patch", backend=backend, batch=len(idxs),
                 xi_ones=sum(xi),
             ):
+                periods = None
                 if backend in ("vectorized", "pallas"):
-                    periods = batch_simulate_periods(
-                        gt, self.space.arch, [inds[i].schedule for i in idxs],
-                        self.sim_config, backend=backend,
-                    )
-                else:
+                    if backend not in self._sim_breaker_open:
+                        try:
+                            faults.fire("engine.sim_batch", backend=backend)
+                            periods = batch_simulate_periods(
+                                gt, self.space.arch,
+                                [inds[i].schedule for i in idxs],
+                                self.sim_config, backend=backend,
+                            )
+                        except Exception as e:  # noqa: BLE001 — degrade
+                            self._sim_breaker_open.add(backend)
+                            obs.event(
+                                "engine.sim_breaker_open", backend=backend,
+                                error=f"{type(e).__name__}: {e}",
+                            )
+                    if periods is None:
+                        # Circuit open (now or earlier): degrade this
+                        # ξ-group to the events reference backend.
+                        self.sim_degraded[backend] = (
+                            self.sim_degraded.get(backend, 0) + 1
+                        )
+                        obs.counter_add("engine.sim_degraded", backend=backend)
+                if periods is None:
                     periods = [
                         simulate_period(gt, self.space.arch, inds[i].schedule, self.sim_config)
                         for i in idxs

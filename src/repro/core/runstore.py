@@ -44,7 +44,7 @@ try:  # POSIX only; the claim protocol itself never needs it, the
 except ImportError:  # pragma: no cover
     fcntl = None  # type: ignore[assignment]
 
-from .. import obs
+from .. import faults, obs
 
 __all__ = ["RunStore", "canonical_json", "list_campaign_dirs"]
 
@@ -55,6 +55,7 @@ REPORT = "report.json"
 CELL_DIR = "cells"
 CLAIM_DIR = "claims"
 LOCK_FILE = ".lock"
+SUCCESS_LOG = "success.log"
 
 
 def canonical_json(d: Any) -> str:
@@ -94,6 +95,7 @@ class RunStore:
         self.root = root
         self._mem: Dict[str, str] = {}  # in-memory mode: name -> text
         self._mem_claims: Dict[str, Dict[str, Any]] = {}  # hash -> claim info
+        self._mem_success: List[Dict[str, Any]] = []  # in-memory success log
 
     # ----------------------------------------------------------------- paths
     def cell_path(self, spec_hash: str) -> str:
@@ -125,14 +127,35 @@ class RunStore:
                 os.close(fd)
 
     # ---------------------------------------------------------------- claims
+    def _claim_payload(self, owner: str) -> str:
+        now = time.time()
+        # "hb" is the authoritative heartbeat: TTL staleness is judged on
+        # it, never on the file mtime, whose granularity is filesystem-
+        # dependent (coarse-mtime mounts made takeover decisions random).
+        return canonical_json(
+            {"owner": owner, "pid": os.getpid(), "time": now, "hb": now}
+        )
+
+    def _claim_age(self, spec_hash: str) -> Optional[float]:
+        """Seconds since the claim's last heartbeat, or None if the claim
+        is gone.  A torn/old-format payload falls back to the mtime (the
+        heartbeat write also bumps it)."""
+        info = self.claim_info(spec_hash)
+        if info is not None and isinstance(info.get("hb"), (int, float)):
+            return time.time() - float(info["hb"])
+        try:
+            return time.time() - os.stat(self.claim_path(spec_hash)).st_mtime
+        except OSError:
+            return None
+
     def claim(self, spec_hash: str, owner: str, *, ttl_s: Optional[float] = None) -> bool:
         """Try to claim ``spec_hash`` for execution.  Exactly one caller
         wins (``O_CREAT|O_EXCL`` — the filesystem arbitrates across
         processes); everyone else gets ``False`` and should either wait
-        for the artifact or move on.  A claim older than ``ttl_s``
-        seconds (owner presumed dead — claims are heartbeat-refreshed via
-        :meth:`refresh_claim`) is broken and re-taken under the store
-        lock.
+        for the artifact or move on.  A claim whose heartbeat (the ``hb``
+        field of the payload, rewritten by :meth:`refresh_claim`) is
+        older than ``ttl_s`` seconds (owner presumed dead) is broken and
+        re-taken under the store lock.
 
         Only a *loadable* artifact refuses the claim: a corrupt one
         counts as missing everywhere else (:meth:`try_load_cell`), so it
@@ -143,28 +166,26 @@ class RunStore:
         if self.root is None:
             if spec_hash in self._mem_claims:
                 return False
-            self._mem_claims[spec_hash] = {"owner": owner, "time": time.time()}
+            now = time.time()
+            self._mem_claims[spec_hash] = {"owner": owner, "time": now, "hb": now}
             return True
         path = self.claim_path(spec_hash)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        payload = canonical_json({"owner": owner, "pid": os.getpid(), "time": time.time()})
         try:
             fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY, 0o666)
         except FileExistsError:
             if ttl_s is None:
                 return False
-            try:
-                age = time.time() - os.stat(path).st_mtime
-            except OSError:  # released between the open and the stat
-                age = None
+            age = self._claim_age(spec_hash)
             if age is None or age <= ttl_s:
                 return False
             # Stale claim: break it under the store lock so two takeover
             # attempts can't both win.
             with self.lock():
+                stale_age = self._claim_age(spec_hash)
+                if stale_age is None or stale_age <= ttl_s:
+                    return False  # owner heartbeat arrived meanwhile
                 try:
-                    if time.time() - os.stat(path).st_mtime <= ttl_s:
-                        return False  # owner heartbeat arrived meanwhile
                     os.unlink(path)
                 except OSError:
                     pass
@@ -177,26 +198,51 @@ class RunStore:
                     spec=spec_hash[:12], owner=owner, age_s=round(age, 3),
                 )
         with os.fdopen(fd, "w") as f:
-            f.write(payload)
+            f.write(self._claim_payload(owner))
         return True
 
     def refresh_claim(self, spec_hash: str, owner: str) -> None:
-        """Heartbeat: bump the claim's mtime so TTL-based takeover
-        doesn't fire on a live, long-running decode."""
+        """Heartbeat: rewrite the claim payload with a fresh ``hb``
+        timestamp.  Opens without ``O_CREAT`` so a released claim is
+        never resurrected by a late heartbeat; a reader racing the
+        truncate+write sees a torn payload and falls back to the mtime,
+        which this write also bumps — either way the claim looks live."""
         if self.root is None:
             info = self._mem_claims.get(spec_hash)
             if info is not None and info.get("owner") == owner:
-                info["time"] = time.time()
+                info["hb"] = time.time()
+            return
+        info = self.claim_info(spec_hash)
+        if info is not None and info.get("owner") not in (None, owner):
+            return  # the claim was taken over; it is not ours to refresh
+        try:
+            fd = os.open(self.claim_path(spec_hash), os.O_WRONLY)
+        except OSError:
             return
         try:
-            os.utime(self.claim_path(spec_hash))
+            os.ftruncate(fd, 0)
+            os.write(fd, self._claim_payload(owner).encode())
         except OSError:
             pass
+        finally:
+            os.close(fd)
 
-    def release_claim(self, spec_hash: str) -> None:
+    def release_claim(self, spec_hash: str, owner: Optional[str] = None) -> None:
+        """Drop the claim.  With ``owner`` given, only a claim still held
+        by that owner is dropped — a worker whose claim was broken by a
+        stale takeover must not yank the new owner's claim out from under
+        it on its way out."""
+        if faults.fire("store.release_claim", spec=spec_hash[:12]) == "lost":
+            return  # injected claim-release loss: the unlink never happens
         if self.root is None:
-            self._mem_claims.pop(spec_hash, None)
+            info = self._mem_claims.get(spec_hash)
+            if owner is None or (info is not None and info.get("owner") == owner):
+                self._mem_claims.pop(spec_hash, None)
             return
+        if owner is not None:
+            info = self.claim_info(spec_hash)
+            if info is not None and info.get("owner") not in (None, owner):
+                return
         try:
             os.unlink(self.claim_path(spec_hash))
         except OSError:
@@ -238,6 +284,46 @@ class RunStore:
                 released.append(h)
         return released
 
+    def sweep_stale_claims(self, ttl_s: Optional[float] = None) -> List[str]:
+        """Garbage-collect orphan claims: any claim whose artifact is
+        already loadable (the work is done — a lost release or a crash
+        between publish and unlink left the file behind), plus — when
+        ``ttl_s`` is given — any claim whose heartbeat is older than
+        ``ttl_s`` (dead owner nobody ever took over from).  Runs under
+        the store lock; returns the swept hashes.  Called on scheduler
+        shutdown so a cleanly stopped service leaves zero claims."""
+        swept: List[str] = []
+        if self.root is None:
+            for h in list(self._mem_claims):
+                if self.try_load_cell(h) is not None:
+                    self._mem_claims.pop(h, None)
+                    swept.append(h)
+            return swept
+        d = os.path.join(self.root, CLAIM_DIR)
+        try:
+            names = os.listdir(d)
+        except OSError:
+            return swept
+        with self.lock():
+            for name in names:
+                if not name.endswith(".claim"):
+                    continue
+                h = name[: -len(".claim")]
+                if self.try_load_cell(h) is not None:
+                    reason = "artifact_exists"
+                else:
+                    age = self._claim_age(h)
+                    if ttl_s is None or age is None or age <= ttl_s:
+                        continue
+                    reason = "stale_heartbeat"
+                try:
+                    os.unlink(os.path.join(d, name))
+                except OSError:
+                    continue
+                swept.append(h)
+                obs.event("runstore.claim_swept", spec=h[:12], reason=reason)
+        return swept
+
     def _read(self, name: str) -> Optional[str]:
         if self.root is None:
             return self._mem.get(name)
@@ -276,10 +362,96 @@ class RunStore:
         return sorted(n[: -len(".json")] for n in names if n.endswith(".json"))
 
     def save_cell(self, spec_hash: str, payload: Dict[str, Any]) -> str:
-        return self._write(
-            os.path.join(CELL_DIR, f"{spec_hash}.json"),
-            json.dumps(payload, sort_keys=True),
+        text = json.dumps(payload, sort_keys=True)
+        kind = faults.fire("store.save_cell", spec=spec_hash[:12])
+        if kind == "torn":
+            # Model power loss mid-write: a truncated artifact lands on
+            # the *final* path (bypassing the atomic tempfile dance) and
+            # the process dies before any success accounting — resume
+            # must treat the torn file as missing and re-execute.
+            if self.root is not None:
+                path = self.cell_path(spec_hash)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w") as f:
+                    f.write(text[: max(1, len(text) // 3)])
+            faults.kill_self()
+        elif kind == "lost":
+            # Model a lost fsync/power loss just before durability: die
+            # with nothing on disk and no success-log line.
+            faults.kill_self()
+        return self._write(os.path.join(CELL_DIR, f"{spec_hash}.json"), text)
+
+    def publish_cell(
+        self, spec_hash: str, payload: Dict[str, Any], owner: str
+    ) -> bool:
+        """Exactly-once artifact publication for claim-holding executors.
+        Under the store lock: if the artifact is already loadable (a
+        racing publisher won) or the claim now belongs to someone else (a
+        stale takeover inherited the work while this owner hung), the
+        decode result is discarded and ``False`` returned.  Otherwise the
+        artifact is written and one line appended to the success log —
+        the audit trail the chaos convergence checker uses to prove every
+        unique cell hash was decoded exactly once."""
+        if self.root is None:
+            if self.try_load_cell(spec_hash) is not None:
+                return False
+            info = self._mem_claims.get(spec_hash)
+            if info is not None and info.get("owner") not in (None, owner):
+                return False
+            self.save_cell(spec_hash, payload)
+            self._append_success(spec_hash, owner)
+            return True
+        with self.lock():
+            if self.try_load_cell(spec_hash) is not None:
+                return False
+            info = self.claim_info(spec_hash)
+            if info is not None and info.get("owner") not in (None, owner):
+                obs.event(
+                    "runstore.publish_lost_claim",
+                    spec=spec_hash[:12], owner=owner,
+                )
+                return False
+            self.save_cell(spec_hash, payload)
+            self._append_success(spec_hash, owner)
+            return True
+
+    # ----------------------------------------------------------- success log
+    def _append_success(self, spec_hash: str, owner: str) -> None:
+        record = canonical_json({"owner": owner, "spec": spec_hash})
+        if self.root is None:
+            self._mem_success.append(json.loads(record))
+            return
+        # One O_APPEND write per publish: atomic at jsonl granularity, so
+        # the log survives arbitrary crash schedules uncorrupted.
+        fd = os.open(
+            os.path.join(self.root, SUCCESS_LOG),
+            os.O_CREAT | os.O_APPEND | os.O_WRONLY, 0o666,
         )
+        try:
+            os.write(fd, (record + "\n").encode())
+        finally:
+            os.close(fd)
+
+    def success_log(self) -> List[Dict[str, Any]]:
+        """Parsed success-log records, in append order (torn trailing
+        lines are skipped — they cannot occur from our own writes, but
+        the reader should never be the thing that fails)."""
+        if self.root is None:
+            return [dict(r) for r in self._mem_success]
+        out: List[Dict[str, Any]] = []
+        try:
+            with open(os.path.join(self.root, SUCCESS_LOG)) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(json.loads(line))
+                    except ValueError:
+                        continue
+        except OSError:
+            return []
+        return out
 
     def load_cell(self, spec_hash: str) -> Dict[str, Any]:
         text = self._read(os.path.join(CELL_DIR, f"{spec_hash}.json"))
@@ -293,6 +465,7 @@ class RunStore:
         the cell instead of dying on ``json.JSONDecodeError`` (a torn
         artifact can only come from outside interference — our own writes
         go through ``os.replace`` — but the store should still heal)."""
+        faults.fire("store.load_cell", spec=spec_hash[:12])
         text = self._read(os.path.join(CELL_DIR, f"{spec_hash}.json"))
         if text is None:
             return None
@@ -323,11 +496,30 @@ class RunStore:
         # lock keeps the temp-file churn and any future read-modify-write
         # of the manifest race-free.
         with self.lock():
-            return self._write(MANIFEST, canonical_json(manifest) + "\n")
+            text = canonical_json(manifest) + "\n"
+            if faults.fire("store.write_manifest") == "corrupt":
+                # Injected torn manifest: half the canonical text plus an
+                # undecodable tail.  read_manifest treats it as missing
+                # and the next (idempotent) submit rewrites it whole.
+                text = text[: len(text) // 2] + "\x00garbage"
+            return self._write(MANIFEST, text)
 
     def read_manifest(self) -> Optional[Dict[str, Any]]:
+        """The manifest, or None when absent *or unreadable*: a corrupt
+        manifest (torn write from outside interference) must heal on the
+        next submit, not wedge every status/resume call on a
+        ``JSONDecodeError``."""
         text = self._read(MANIFEST)
-        return None if text is None else json.loads(text)
+        if text is None:
+            return None
+        try:
+            return json.loads(text)
+        except ValueError:
+            _log.warning(
+                "corrupt manifest under %s — treating as missing", self.root
+            )
+            obs.event("runstore.corrupt_manifest", root=str(self.root))
+            return None
 
     def write_report(self, report: Dict[str, Any]) -> str:
         return self._write(REPORT, json.dumps(report, sort_keys=True, indent=2) + "\n")

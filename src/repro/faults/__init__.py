@@ -1,0 +1,33 @@
+"""Deterministic fault injection + chaos harness for the service stack.
+
+``repro.faults`` is the injection layer (:mod:`~repro.faults.injector`:
+``fire``/``FaultPlan``, inert unless ``REPRO_FAULTS`` is set) plus the
+chaos driver (:mod:`~repro.faults.chaos`: seeded plan generation, the
+faulty→heal→compare convergence checker behind ``python -m repro chaos
+run``).  See DESIGN.md §11 for the failure model and the fault matrix.
+"""
+from .injector import (
+    FAULTS_ENV,
+    FaultInjected,
+    FaultPlan,
+    FaultRule,
+    configure,
+    enabled,
+    fire,
+    kill_self,
+    read_fired_log,
+    reset,
+)
+
+__all__ = [
+    "FAULTS_ENV",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultRule",
+    "configure",
+    "enabled",
+    "fire",
+    "kill_self",
+    "read_fired_log",
+    "reset",
+]

@@ -14,7 +14,7 @@ bit-identical.
 """
 from .client import ServiceClient, ServiceError
 from .scheduler import Scheduler, SchedulerConfig, WorkUnit, run_groups_local
-from .server import CampaignService, make_server, serve
+from .server import CampaignService, QueueSaturated, make_server, serve
 from .store import DEFAULT_SERVICE_ROOT, CampaignView, GlobalStore
 
 __all__ = [
@@ -22,6 +22,7 @@ __all__ = [
     "CampaignView",
     "DEFAULT_SERVICE_ROOT",
     "GlobalStore",
+    "QueueSaturated",
     "Scheduler",
     "SchedulerConfig",
     "ServiceClient",

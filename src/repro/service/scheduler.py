@@ -39,6 +39,7 @@ from __future__ import annotations
 import multiprocessing
 import os
 import queue as queue_mod
+import signal
 import socket
 import threading
 import time
@@ -46,7 +47,7 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from .. import obs
+from .. import faults, obs
 from ..core.runstore import RunStore
 
 __all__ = ["SchedulerConfig", "WorkUnit", "Scheduler", "run_groups_local"]
@@ -64,6 +65,7 @@ class SchedulerConfig:
     heartbeat_interval_s: float = 0.5
     heartbeat_timeout_s: float = 30.0
     claim_ttl_s: float = 60.0        # stale-claim takeover threshold
+    unit_deadline_s: Optional[float] = None  # wall cap per unit attempt
     max_retries: int = 2             # per unit, on worker death only
     backoff_base_s: float = 0.25     # retry n waits base * 2**(n-1)
     priority_weight: float = 1000.0  # tenant priority dominates...
@@ -132,21 +134,32 @@ def _execute_unit(
         if delay:
             time.sleep(delay)
         t0 = time.monotonic()
+        published = False
         try:
             with obs.span(
                 "service.cell", spec=h[:12], tag=cell.tag, **attrs
             ):
+                faults.fire("sched.mid_decode", spec=h[:12])
                 if engine is None:
                     problem = ExplorationProblem.from_json(cell.problem)
                     engine = problem.make_engine(
                         **{**cell.engine, **(engine_overrides or {})}
                     )
                 art = run_cell(cell, engine=engine)
-                store.save_cell(h, art)
+                faults.fire("sched.pre_publish", spec=h[:12])
+                published = store.publish_cell(h, art, owner)
         finally:
-            store.release_claim(h)
+            store.release_claim(h, owner=owner)
             on_claim(h, False)
         wall = time.monotonic() - t0
+        if not published:
+            # The claim was inherited (stale takeover while this worker
+            # hung) or a racing publisher won: the artifact is — or will
+            # be — durable exactly once, and this decode is discarded.
+            deduped.append(h)
+            obs.counter_add("service.cells_deduped", **attrs)
+            emit({"type": "cell_dedup", "spec_hash": h, "tag": cell.tag})
+            return
         executed.append(h)
         stats.append(
             {
@@ -174,6 +187,7 @@ def _execute_unit(
                     obs.counter_add("service.cells_deduped", **attrs)
                     emit({"type": "cell_dedup", "spec_hash": h, "tag": cell.tag})
                     continue
+                faults.fire("sched.pre_claim", spec=h[:12])
                 if not store.claim(h, owner, ttl_s=claim_ttl_s):
                     # Another worker is decoding this hash right now — park
                     # the cell and come back once the rest of the group ran.
@@ -232,15 +246,29 @@ def _worker_main(wid: int, owner: str, task_q, result_q, cell_root: Optional[str
     held_lock = threading.Lock()
     stop = threading.Event()
 
+    # SIGTERM (supervisor terminate(), clean shutdown) must unwind the
+    # Python stack so the claim-releasing ``finally`` below runs — the
+    # default handler would exit without it and leave claims for the TTL.
+    def _on_sigterm(signum, frame):  # pragma: no cover — signal path
+        raise SystemExit(128 + signum)
+
+    try:
+        signal.signal(signal.SIGTERM, _on_sigterm)
+    except (ValueError, OSError):  # pragma: no cover — non-main thread
+        pass
+
     def heartbeat() -> None:
         while not stop.is_set():
-            try:
-                result_q.put(("heartbeat", wid, time.time()))
-            except Exception:
-                return
-            with held_lock:
-                for h in list(held):
-                    store.refresh_claim(h, owner)
+            # Injected heartbeat loss (clock skew / GC pause model): skip
+            # this beat *and* the claim refreshes it carries.
+            if faults.fire("sched.heartbeat", worker=wid) != "skip":
+                try:
+                    result_q.put(("heartbeat", wid, time.time()))
+                except Exception:
+                    return
+                with held_lock:
+                    for h in list(held):
+                        store.refresh_claim(h, owner)
             stop.wait(hb_interval_s)
 
     threading.Thread(target=heartbeat, daemon=True).start()
@@ -252,45 +280,55 @@ def _worker_main(wid: int, owner: str, task_q, result_q, cell_root: Optional[str
     from ..core.campaign import CampaignCell
 
     result_q.put(("ready", wid))
-    while True:
-        msg = task_q.get()
-        if msg[0] == "stop":
-            break
-        _, payload = msg
-        unit_id = payload["unit_id"]
+    try:
+        while True:
+            msg = task_q.get()
+            if msg[0] == "stop":
+                break
+            _, payload = msg
+            unit_id = payload["unit_id"]
 
-        def emit(event: Dict[str, Any], _uid=unit_id, _p=payload) -> None:
-            result_q.put(
-                ("event", wid,
-                 {**event, "unit_id": _uid,
-                  "campaign_id": _p["campaign_id"], "tenant": _p["tenant"]})
-            )
+            def emit(event: Dict[str, Any], _uid=unit_id, _p=payload) -> None:
+                result_q.put(
+                    ("event", wid,
+                     {**event, "unit_id": _uid,
+                      "campaign_id": _p["campaign_id"], "tenant": _p["tenant"]})
+                )
 
+            try:
+                out = _execute_unit(
+                    [CampaignCell.from_json(d) for d in payload["cells"]],
+                    store,
+                    owner=owner,
+                    engine_overrides=payload.get("engine_overrides") or {},
+                    claim_ttl_s=payload.get("claim_ttl_s"),
+                    emit=emit,
+                    on_claim=on_claim,
+                    poll_s=payload.get("claim_poll_s", 0.05),
+                    attrs={"unit": unit_id, "campaign": payload["campaign_id"],
+                           "tenant": payload["tenant"], "worker": wid},
+                )
+                result_q.put(("unit_done", wid, unit_id, out))
+            except (SystemExit, KeyboardInterrupt):
+                raise  # shutdown signals unwind to the claim release below
+            except BaseException as e:  # noqa: BLE001 — report, don't die
+                result_q.put(
+                    ("unit_error", wid, unit_id,
+                     "".join(traceback.format_exception_only(type(e), e)).strip())
+                )
+            # Flush per unit: the parent may terminate() this process on
+            # shutdown, which skips atexit — unflushed spans would be lost.
+            obs.flush()
+            result_q.put(("ready", wid))
+    finally:
+        stop.set()
+        # A cleanly stopped (or SIGTERMed) worker never leaves claims for
+        # the TTL to reap — only SIGKILL can skip this.
         try:
-            out = _execute_unit(
-                [CampaignCell.from_json(d) for d in payload["cells"]],
-                store,
-                owner=owner,
-                engine_overrides=payload.get("engine_overrides") or {},
-                claim_ttl_s=payload.get("claim_ttl_s"),
-                emit=emit,
-                on_claim=on_claim,
-                poll_s=payload.get("claim_poll_s", 0.05),
-                attrs={"unit": unit_id, "campaign": payload["campaign_id"],
-                       "tenant": payload["tenant"], "worker": wid},
-            )
-            result_q.put(("unit_done", wid, unit_id, out))
-        except BaseException as e:  # noqa: BLE001 — report, don't die
-            result_q.put(
-                ("unit_error", wid, unit_id,
-                 "".join(traceback.format_exception_only(type(e), e)).strip())
-            )
-        # Flush per unit: the parent may terminate() this process on
-        # shutdown, which skips atexit — unflushed spans would be lost.
+            store.release_claims_of(owner)
+        except Exception:  # pragma: no cover — best-effort on teardown
+            pass
         obs.flush()
-        result_q.put(("ready", wid))
-    stop.set()
-    obs.flush()
 
 
 class _WorkerHandle:
@@ -307,6 +345,7 @@ class _WorkerHandle:
         )
         self.last_heartbeat = time.time()
         self.current: Optional[WorkUnit] = None
+        self.unit_started_at = 0.0
         self.proc.start()
 
     @property
@@ -360,7 +399,7 @@ class Scheduler:
         self._backend_timing: Dict[str, Dict[str, Any]] = {}
         self._counters = {
             "units_submitted": 0, "units_done": 0, "units_failed": 0,
-            "retries": 0, "worker_restarts": 0,
+            "retries": 0, "worker_restarts": 0, "deadline_cancels": 0,
             "cells_executed": 0, "cells_deduped": 0,
         }
 
@@ -392,6 +431,21 @@ class Scheduler:
         if self._collector is not None:
             self._collector.join(timeout=timeout_s)
             self._collector = None
+        # Claim hygiene on shutdown: workers release their own claims in
+        # their ``finally``, but a worker that had to be terminate()d and
+        # outran the join may not have — release by owner here, then GC
+        # any artifact-backed orphans (lost-release faults, crashes
+        # between publish and unlink).  A cleanly stopped scheduler
+        # leaves zero claims of its own behind.
+        for h in self._workers.values():
+            try:
+                self.store.release_claims_of(h.owner)
+            except Exception:  # pragma: no cover — best-effort teardown
+                pass
+        try:
+            self.store.sweep_stale_claims()
+        except Exception:  # pragma: no cover
+            pass
         obs.flush()
 
     # ------------------------------------------------------------- submit
@@ -491,6 +545,7 @@ class Scheduler:
             wid = self._idle.pop(0)
             handle = self._workers[wid]
             handle.current = unit
+            handle.unit_started_at = time.time()
             t = self._tenant(unit.tenant)
             t["queued_units"] -= 1
             t["running_units"] += 1
@@ -512,6 +567,13 @@ class Scheduler:
 
     # ------------------------------------------------------------ collector
     def _collect(self) -> None:
+        # Maintenance (supervision checks + dispatch of backoff-delayed
+        # units) must run on a clock, not only when the result queue goes
+        # quiet: a busy pool heartbeating faster than the get() timeout
+        # would otherwise starve it — requeued units whose backoff hadn't
+        # elapsed at "ready"-time were never dispatched again (livelock
+        # found by the chaos harness, plan000/seed 0).
+        last_maintenance = time.monotonic()
         while True:
             with self._lock:
                 if self._stopping:
@@ -519,9 +581,14 @@ class Scheduler:
             try:
                 msg = self._result_q.get(timeout=0.2)
             except queue_mod.Empty:
+                msg = None
+            now = time.monotonic()
+            if msg is None or now - last_maintenance > 0.2:
+                last_maintenance = now
                 self._check_workers()
                 with self._lock:
                     self._dispatch_locked()
+            if msg is None:
                 continue
             kind = msg[0]
             if kind == "heartbeat":
@@ -613,7 +680,17 @@ class Scheduler:
                 handle.current is not None
                 and now - handle.last_heartbeat > self.cfg.heartbeat_timeout_s
             )
-            if not dead and not hung:
+            # Per-unit execution deadline: a unit that heartbeats happily
+            # but never finishes (wedged decode, injected hang) is
+            # cancelled by replacing its worker — same recovery path as a
+            # death, but separately counted and announced.
+            expired = (
+                not dead and not hung
+                and handle.current is not None
+                and self.cfg.unit_deadline_s is not None
+                and now - handle.unit_started_at > self.cfg.unit_deadline_s
+            )
+            if not dead and not hung and not expired:
                 continue
             with self._lock:
                 if self._stopping:
@@ -631,7 +708,15 @@ class Scheduler:
                 if wid in self._idle:
                     self._idle.remove(wid)
                 self._counters["worker_restarts"] += 1
-                reason = "dead" if dead else "heartbeat_timeout"
+                reason = ("dead" if dead
+                          else "heartbeat_timeout" if hung else "unit_deadline")
+                if expired:
+                    self._counters["deadline_cancels"] += 1
+                    obs.event(
+                        "service.unit_deadline", worker=wid,
+                        unit=unit.unit_id if unit is not None else None,
+                        deadline_s=self.cfg.unit_deadline_s,
+                    )
                 _log.warning(
                     "worker %d (%s) replaced: %s", wid, old_owner, reason
                 )
@@ -762,6 +847,11 @@ class Scheduler:
 
     def worker_pids(self) -> Dict[int, Optional[int]]:
         return {wid: h.pid for wid, h in self._workers.items()}
+
+    def queue_depth(self) -> int:
+        """Units queued but not yet dispatched (the backpressure gauge)."""
+        with self._lock:
+            return len(self._queue)
 
     def metrics(self) -> Dict[str, Any]:
         with self._lock:

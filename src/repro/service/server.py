@@ -37,14 +37,29 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, urlparse
 
-from .. import obs
+from .. import faults, obs
 from ..core.campaign import Campaign, build_report
 from .scheduler import Scheduler, SchedulerConfig
 from .store import DEFAULT_SERVICE_ROOT, GlobalStore
 
-__all__ = ["CampaignService", "serve", "make_server"]
+__all__ = ["CampaignService", "QueueSaturated", "serve", "make_server"]
 
 _access_log = obs.get_logger("service.access")
+
+
+class QueueSaturated(RuntimeError):
+    """Raised by :meth:`CampaignService.submit` when the scheduler queue
+    is past the high-water mark; the HTTP layer maps it to ``429`` with
+    a ``Retry-After`` hint."""
+
+    def __init__(self, depth: int, high_water: int, retry_after_s: float) -> None:
+        super().__init__(
+            f"queue saturated: {depth} units queued "
+            f"(high-water {high_water}); retry in {retry_after_s:g}s"
+        )
+        self.depth = depth
+        self.high_water = high_water
+        self.retry_after_s = retry_after_s
 
 
 class CampaignService:
@@ -58,7 +73,9 @@ class CampaignService:
         workers: int = 2,
         config: Optional[SchedulerConfig] = None,
         tenant_quotas: Optional[Dict[str, int]] = None,
+        queue_high_water: Optional[int] = None,
     ) -> None:
+        self.queue_high_water = queue_high_water
         self.store = GlobalStore(root)
         self.scheduler = Scheduler(
             self.store.cells,
@@ -81,6 +98,19 @@ class CampaignService:
         tenant: str = "default",
         priority: int = 0,
     ) -> Dict[str, Any]:
+        # Backpressure before any expensive work: past the high-water
+        # mark the caller gets 429 + Retry-After instead of deepening an
+        # already-saturated queue.  Resubmitting later is free
+        # (idempotent), so shedding is always safe.
+        if self.queue_high_water is not None:
+            depth = self.scheduler.queue_depth()
+            if depth >= self.queue_high_water:
+                obs.event(
+                    "service.queue_saturated", depth=depth,
+                    high_water=self.queue_high_water, tenant=tenant,
+                )
+                raise QueueSaturated(depth, self.queue_high_water,
+                                     retry_after_s=1.0)
         campaign = Campaign.from_json(campaign_spec)
         cells = campaign.expand()
         submission_id = f"{tenant}--{campaign.campaign_id()}"
@@ -204,11 +234,16 @@ class _Handler(BaseHTTPRequestHandler):
         if obs.access_log_enabled():
             _access_log.info("%s %s", self.address_string(), fmt % args)
 
-    def _send_json(self, payload: Any, code: int = 200) -> None:
+    def _send_json(
+        self, payload: Any, code: int = 200,
+        headers: Optional[Dict[str, str]] = None,
+    ) -> None:
         body = (json.dumps(payload, sort_keys=True) + "\n").encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
@@ -223,8 +258,30 @@ class _Handler(BaseHTTPRequestHandler):
     def _error(self, code: int, message: str) -> None:
         self._send_json({"error": message}, code=code)
 
+    def _injected_fault(self) -> bool:
+        """Evaluate the ``http.request`` injection site; True when the
+        fault consumed the request (connection reset or 5xx).  Generic
+        ``slow`` rules (stalled responses) sleep inside ``fire`` and fall
+        through to normal handling."""
+        kind = faults.fire("http.request", path=self.path)
+        if kind == "reset":
+            # Abrupt connection loss: no status line, no body.  finish()
+            # tolerates the closed files.
+            self.close_connection = True
+            try:
+                self.connection.close()
+            except OSError:
+                pass
+            return True
+        if kind == "error_5xx":
+            self._error(503, "injected server error")
+            return True
+        return False
+
     # --------------------------------------------------------------- routes
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        if self._injected_fault():
+            return
         url = urlparse(self.path)
         parts = [p for p in url.path.split("/") if p]
         try:
@@ -259,6 +316,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._error(500, f"{type(e).__name__}: {e}")
 
     def do_POST(self) -> None:  # noqa: N802
+        if self._injected_fault():
+            return
         url = urlparse(self.path)
         parts = [p for p in url.path.split("/") if p]
         try:
@@ -282,6 +341,12 @@ class _Handler(BaseHTTPRequestHandler):
                 self._send_json(out, code=201)
             else:
                 self._error(404, f"no route POST {url.path!r}")
+        except QueueSaturated as e:
+            self._send_json(
+                {"error": str(e), "retry_after_s": e.retry_after_s},
+                code=429,
+                headers={"Retry-After": f"{e.retry_after_s:g}"},
+            )
         except (ValueError, KeyError) as e:
             self._error(400, f"{type(e).__name__}: {e}")
         except (BrokenPipeError, ConnectionResetError):
@@ -321,11 +386,13 @@ def make_server(
     workers: int = 2,
     config: Optional[SchedulerConfig] = None,
     tenant_quotas: Optional[Dict[str, int]] = None,
+    queue_high_water: Optional[int] = None,
 ) -> Tuple[ThreadingHTTPServer, CampaignService]:
     """Build (but don't run) the HTTP server; ``port=0`` picks an
     ephemeral port (``server.server_address``)."""
     service = CampaignService(
-        root, workers=workers, config=config, tenant_quotas=tenant_quotas
+        root, workers=workers, config=config, tenant_quotas=tenant_quotas,
+        queue_high_water=queue_high_water,
     )
     handler = type("BoundHandler", (_Handler,), {"service": service})
     server = ThreadingHTTPServer((host, port), handler)
@@ -340,10 +407,12 @@ def serve(
     port: int = 8321,
     workers: int = 2,
     config: Optional[SchedulerConfig] = None,
+    queue_high_water: Optional[int] = None,
 ) -> None:
     """Run the campaign service until interrupted (the CLI entrypoint)."""
     server, service = make_server(
-        root, host=host, port=port, workers=workers, config=config
+        root, host=host, port=port, workers=workers, config=config,
+        queue_high_water=queue_high_water,
     )
     h, p = server.server_address[:2]
     print(f"campaign service on http://{h}:{p} "

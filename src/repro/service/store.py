@@ -63,6 +63,15 @@ class CampaignView(RunStore):
     def save_cell(self, spec_hash: str, payload: Dict[str, Any]) -> str:
         return self.global_store.cells.save_cell(spec_hash, payload)
 
+    def publish_cell(self, spec_hash: str, payload: Dict[str, Any], owner: str) -> bool:
+        return self.global_store.cells.publish_cell(spec_hash, payload, owner)
+
+    def success_log(self) -> List[Dict[str, Any]]:
+        return self.global_store.cells.success_log()
+
+    def sweep_stale_claims(self, ttl_s=None) -> List[str]:
+        return self.global_store.cells.sweep_stale_claims(ttl_s)
+
     def load_cell(self, spec_hash: str) -> Dict[str, Any]:
         return self.global_store.cells.load_cell(spec_hash)
 
@@ -78,8 +87,8 @@ class CampaignView(RunStore):
     def refresh_claim(self, spec_hash: str, owner: str) -> None:
         self.global_store.cells.refresh_claim(spec_hash, owner)
 
-    def release_claim(self, spec_hash: str) -> None:
-        self.global_store.cells.release_claim(spec_hash)
+    def release_claim(self, spec_hash: str, owner: Optional[str] = None) -> None:
+        self.global_store.cells.release_claim(spec_hash, owner)
 
     def claim_info(self, spec_hash: str) -> Optional[Dict[str, Any]]:
         return self.global_store.cells.claim_info(spec_hash)

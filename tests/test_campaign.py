@@ -364,3 +364,61 @@ def test_acceptance_matrix_cli_vs_direct(tmp_path, capsys, sobel_arch):
     assert res.executed == [victim.spec_hash()]
     with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
         assert f.read() == manifest_before
+
+
+# ============================================== concurrent resume (PR 9)
+def test_concurrent_resume_two_processes_converge(tmp_path):
+    """Two `campaign resume` processes racing on one store (the operator
+    double-launch, or two nodes sharing a filesystem): claims arbitrate
+    so each missing cell is decoded by exactly one process (proven by
+    the success log), both exit cleanly, and the manifest is
+    byte-identical to the uninterrupted run."""
+    import subprocess
+    import sys
+
+    import repro
+
+    camp = tiny_campaign()
+    store_dir = str(tmp_path / "store")
+    res1 = CampaignRunner(camp, store=RunStore(store_dir)).run()
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        manifest_ref = f.read()
+    hashes = {c.spec_hash() for c in camp.expand()}
+
+    # Wipe every artifact and the success log: both resumers see all
+    # cells missing and race for the claims.
+    store = RunStore(store_dir)
+    for h in hashes:
+        store.delete_cell(h)
+    os.remove(os.path.join(store_dir, "success.log"))
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.dirname(list(repro.__path__)[0])]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    env["REPRO_SERVICE_CELL_DELAY_S"] = "0.3"  # widen the race window
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-m", "repro", "campaign", "resume", store_dir],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        for _ in range(2)
+    ]
+    outs = [p.communicate(timeout=300) for p in procs]
+    for p, (out, err) in zip(procs, outs):
+        assert p.returncode == 0, (out, err)
+
+    # Exactly one decode per unique cell hash across both processes.
+    log = store.success_log()
+    assert sorted(r["spec"] for r in log) == sorted(hashes)
+    # Both processes converged on the same artifacts and manifest bytes.
+    for cell in camp.expand():
+        art = store.try_load_cell(cell.spec_hash())
+        assert art is not None and art["spec_hash"] == cell.spec_hash()
+        assert [tuple(p) for p in art["run"]["front"]] == res1.front(cell.tag)
+    with open(os.path.join(store_dir, "manifest.json"), "rb") as f:
+        assert f.read() == manifest_ref
+    # No claims left behind by either process.
+    claims = os.path.join(store_dir, "claims")
+    assert not os.path.isdir(claims) or os.listdir(claims) == []

@@ -230,3 +230,36 @@ def test_auto_backend_small_batch_routes_to_events(monkeypatch, sobel_arch):
         for _ in range(6):  # singleton batches -> every group is size 1
             eng.evaluate(space.force_xi(space.random(rng), 1))
         assert set(eng.sim_backend_choices) == {"events"}
+
+
+# ------------------------------------------------- sim circuit breaker (PR 9)
+def test_sim_breaker_degrades_to_events_value_identical(sobel_arch):
+    """A vectorized/pallas batch-sim failure opens the per-backend
+    circuit for the engine's lifetime: later ξ-groups degrade to the
+    event-driven reference backend, the degradation is counted, and —
+    because the backends are value-par — the front is identical to a
+    clean events run."""
+    from repro import faults
+    from repro.core import ExplorationProblem, NSGA2Explorer
+    from repro.faults import FaultPlan, FaultRule
+
+    g, arch = sobel_arch
+    problem = ExplorationProblem(
+        graph=g, arch=arch,
+        objectives=("sim_period", "memory", "core_cost"),
+        strategy="MRB_Always",
+    )
+    explorer = NSGA2Explorer(population=10, offspring=5, generations=1, seed=7)
+    faults.configure(FaultPlan(rules=[
+        FaultRule("engine.sim_batch", "error", max_fires=1),
+    ]))
+    try:
+        with problem.make_engine(sim_backend="vectorized") as eng:
+            broken_run = explorer.explore(problem, engine=eng)
+            assert "vectorized" in eng._sim_breaker_open
+            assert eng.sim_degraded.get("vectorized", 0) >= 1
+    finally:
+        faults.reset()
+    with problem.make_engine(sim_backend="events") as eng:
+        events_run = explorer.explore(problem, engine=eng)
+    assert sorted(broken_run.front) == sorted(events_run.front)

@@ -1,0 +1,197 @@
+"""Fault-injection layer: plan model round-trips, deterministic chaos
+plan generation, injection semantics (budgets, probabilities, generic
+vs site-specific kinds), global cross-process budgets, the fired-log
+audit trail, and the provably-inert disabled path."""
+import json
+import multiprocessing
+import os
+import time
+
+import pytest
+
+from repro import faults
+from repro.faults import FaultInjected, FaultPlan, FaultRule
+from repro.faults.chaos import SITE_CLASSES, generate_plans
+
+
+@pytest.fixture(autouse=True)
+def _isolated_gate(monkeypatch):
+    """Every test starts env-unset and cache-dropped, and leaves no
+    armed plan behind for the rest of the suite."""
+    monkeypatch.delenv(faults.FAULTS_ENV, raising=False)
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# ------------------------------------------------------------- plan model
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(
+        seed=7, name="p", fired_log="/tmp/x.jsonl",
+        rules=[
+            FaultRule("store.save_cell", "torn", p=0.5, max_fires=2,
+                      delay_s=0.1, note="n"),
+            FaultRule("sched.*", "crash"),
+        ],
+    )
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    assert FaultPlan.load(path) == plan
+    # from_json fills defaults for sparse rules.
+    sparse = FaultRule.from_json({"site": "x", "kind": "error"})
+    assert (sparse.p, sparse.max_fires) == (1.0, 1)
+
+
+def test_generate_plans_deterministic_and_covering():
+    a = generate_plans(5, seed=3)
+    b = generate_plans(5, seed=3)
+    assert [p.to_json() for p in a] == [p.to_json() for p in b]
+    assert [p.to_json() for p in generate_plans(5, seed=4)] != \
+        [p.to_json() for p in a]
+    for plan in a:
+        classes = {r.site.split(".", 1)[0] for r in plan.rules}
+        assert set(SITE_CLASSES) <= classes  # every class represented
+
+
+# ------------------------------------------------------- fire() semantics
+def test_fire_kinds_and_budget(tmp_path):
+    log = str(tmp_path / "fired.jsonl")
+    faults.configure(FaultPlan(
+        seed=0, fired_log=log,
+        rules=[
+            FaultRule("a.error", "error", max_fires=1),
+            FaultRule("a.slow", "slow", delay_s=0.05, max_fires=1),
+            FaultRule("a.site_specific", "torn", max_fires=2),
+        ],
+    ))
+    assert faults.enabled()
+    with pytest.raises(FaultInjected):
+        faults.fire("a.error", tag="t")
+    assert faults.fire("a.error") is None  # budget of 1 exhausted
+    t0 = time.perf_counter()
+    assert faults.fire("a.slow") is None  # generic: performed in-injector
+    assert time.perf_counter() - t0 >= 0.04
+    # Site-specific kinds are returned for the caller to act on.
+    assert faults.fire("a.site_specific") == "torn"
+    assert faults.fire("a.site_specific") == "torn"
+    assert faults.fire("a.site_specific") is None  # budget of 2
+    assert faults.fire("a.unmatched") is None
+    records = faults.read_fired_log(log)
+    assert [r["site"] for r in records] == \
+        ["a.error", "a.slow", "a.site_specific", "a.site_specific"]
+    assert records[0]["tag"] == "t"  # context lands in the audit line
+
+
+def test_fire_probability_is_seeded():
+    def draws(seed):
+        faults.configure(FaultPlan(seed=seed, rules=[
+            FaultRule("s", "torn", p=0.5, max_fires=0),
+        ]))
+        return [faults.fire("s") for _ in range(32)]
+
+    a, b = draws(1), draws(1)
+    assert a == b  # same seed replays the same draw stream
+    assert a != draws(2)
+    assert set(a) == {None, "torn"}  # p=0.5 actually skips some calls
+
+
+def test_fire_fnmatch_site_patterns():
+    faults.configure(FaultPlan(rules=[FaultRule("sched.*", "skip",
+                                                max_fires=0)]))
+    assert faults.fire("sched.heartbeat") == "skip"
+    assert faults.fire("sched.pre_claim") == "skip"
+    assert faults.fire("store.save_cell") is None
+
+
+def _child_fire(plan_json, out_q):
+    faults.configure(FaultPlan.from_json(json.loads(plan_json)))
+    out_q.put(faults.fire("s"))
+
+
+def test_max_fires_budget_is_global_across_processes(tmp_path):
+    """Ticket files next to the fired log make max_fires a *run* budget,
+    not a per-process one: of N processes evaluating a max_fires=1 rule,
+    exactly one fires."""
+    log = str(tmp_path / "fired.jsonl")
+    plan = FaultPlan(fired_log=log,
+                     rules=[FaultRule("s", "torn", max_fires=1)])
+    ctx = multiprocessing.get_context()
+    out_q = ctx.Queue()
+    procs = [
+        ctx.Process(target=_child_fire,
+                    args=(json.dumps(plan.to_json()), out_q))
+        for _ in range(4)
+    ]
+    for p in procs:
+        p.start()
+    results = [out_q.get(timeout=30) for _ in procs]
+    for p in procs:
+        p.join(timeout=30)
+    assert sorted(r or "-" for r in results) == ["-", "-", "-", "torn"]
+    assert len(faults.read_fired_log(log)) == 1
+
+
+# ------------------------------------------------------------- the gate
+def test_env_plan_inline_and_file(tmp_path, monkeypatch):
+    plan = FaultPlan(rules=[FaultRule("s", "torn")])
+    monkeypatch.setenv(faults.FAULTS_ENV, json.dumps(plan.to_json()))
+    faults.reset()
+    assert faults.enabled() and faults.fire("s") == "torn"
+    path = plan.save(str(tmp_path / "plan.json"))
+    monkeypatch.setenv(faults.FAULTS_ENV, path)
+    faults.reset()
+    assert faults.enabled() and faults.fire("s") == "torn"
+    # An unreadable plan must leave the layer inert, never crash it.
+    monkeypatch.setenv(faults.FAULTS_ENV, str(tmp_path / "missing.json"))
+    faults.reset()
+    assert not faults.enabled() and faults.fire("s") is None
+
+
+def test_configure_overrides_env(monkeypatch):
+    monkeypatch.setenv(
+        faults.FAULTS_ENV,
+        json.dumps(FaultPlan(rules=[FaultRule("s", "torn")]).to_json()),
+    )
+    faults.configure(False)  # forced off despite the env
+    assert not faults.enabled()
+    faults.configure(FaultPlan(rules=[FaultRule("s", "lost")]))
+    assert faults.fire("s") == "lost"  # programmatic plan wins
+
+
+def test_disabled_path_overhead_bounded():
+    """ISSUE-9 acceptance: with REPRO_FAULTS unset, a fire() call at a
+    hot site must cost no more than a cheap dict op — one global read
+    and a None check.  Loose bound (min-of-7) so CI noise can't flake
+    it."""
+    assert not faults.enabled()
+    n = 50_000
+    sink = {}
+
+    def plain():
+        t0 = time.perf_counter()
+        for i in range(n):
+            sink["k"] = i
+        return time.perf_counter() - t0
+
+    def fired():
+        t0 = time.perf_counter()
+        for i in range(n):
+            faults.fire("store.save_cell")
+            sink["k"] = i
+        return time.perf_counter() - t0
+
+    plain(), fired()  # warm up
+    base = min(plain() for _ in range(7))
+    wrapped = min(fired() for _ in range(7))
+    # A no-op function call costs ~base; allow generous headroom while
+    # still catching any environ read, lock, or allocation on the path.
+    assert wrapped <= base * 12 + 0.05, (wrapped, base)
+
+
+def test_read_fired_log_skips_torn_lines(tmp_path):
+    log = str(tmp_path / "fired.jsonl")
+    with open(log, "w") as f:
+        f.write('{"site": "a", "kind": "torn"}\n{"site": "b", "ki')
+    assert [r["site"] for r in faults.read_fired_log(log)] == ["a"]
+    assert faults.read_fired_log(str(tmp_path / "none.jsonl")) == []

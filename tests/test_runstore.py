@@ -90,24 +90,76 @@ def test_claim_exclusive_across_processes(tmp_path):
     assert info["owner"] == winners[0]
 
 
+def _backdate_claim(store, spec_hash, age_s):
+    """Rewrite the claim payload with an ``hb`` that is ``age_s`` old
+    (and matching mtime, for the torn-payload fallback path)."""
+    path = store.claim_path(spec_hash)
+    with open(path) as f:
+        info = json.loads(f.read())
+    info["hb"] = time.time() - age_s
+    with open(path, "w") as f:
+        f.write(json.dumps(info))
+    os.utime(path, (info["hb"], info["hb"]))
+
+
 def test_claim_lifecycle_and_stale_takeover(tmp_path):
     store = RunStore(str(tmp_path / "store"))
     assert store.claim(HASH, "alice")
     assert not store.claim(HASH, "bob")          # held
     assert not store.claim(HASH, "bob", ttl_s=60)  # held and fresh
-    # Age the claim past the TTL: bob takes over.
-    old = time.time() - 120
-    os.utime(store.claim_path(HASH), (old, old))
+    # Age the heartbeat past the TTL: bob takes over.
+    _backdate_claim(store, HASH, 120)
     assert store.claim(HASH, "bob", ttl_s=60)
     assert store.claim_info(HASH)["owner"] == "bob"
     # A heartbeat refresh prevents takeover.
-    old = time.time() - 50
-    os.utime(store.claim_path(HASH), (old, old))
+    _backdate_claim(store, HASH, 50)
     store.refresh_claim(HASH, "bob")
     assert not store.claim(HASH, "carol", ttl_s=60)
     store.release_claim(HASH)
     assert store.claim_info(HASH) is None
     assert store.claim(HASH, "carol")
+
+
+def test_claim_staleness_judged_on_heartbeat_not_mtime(tmp_path):
+    """The ``hb`` payload field is the authoritative liveness signal.  An
+    ancient mtime with a fresh heartbeat must NOT allow takeover (coarse-
+    mtime filesystems would otherwise break live claims at random), and a
+    fresh mtime with an ancient heartbeat MUST allow it."""
+    store = RunStore(str(tmp_path / "store"))
+    assert store.claim(HASH, "alice")
+    # Fresh hb, ancient mtime: still live.
+    old = time.time() - 600
+    os.utime(store.claim_path(HASH), (old, old))
+    assert not store.claim(HASH, "bob", ttl_s=60)
+    # Ancient hb, fresh mtime: stale despite the young-looking file.
+    _backdate_claim(store, HASH, 600)
+    now = time.time()
+    os.utime(store.claim_path(HASH), (now, now))
+    assert store.claim(HASH, "bob", ttl_s=60)
+    assert store.claim_info(HASH)["owner"] == "bob"
+
+
+def test_refresh_claim_never_resurrects_or_steals(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    # A heartbeat for a released claim must not recreate the file.
+    assert store.claim(HASH, "alice")
+    store.release_claim(HASH)
+    store.refresh_claim(HASH, "alice")
+    assert store.claim_info(HASH) is None
+    # A heartbeat from the pre-takeover owner must not clobber the new
+    # owner's claim.
+    assert store.claim(HASH, "bob")
+    store.refresh_claim(HASH, "alice")
+    assert store.claim_info(HASH)["owner"] == "bob"
+
+
+def test_release_claim_with_owner_spares_takeover_winner(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    assert store.claim(HASH, "bob")
+    store.release_claim(HASH, owner="alice")  # alice lost the claim: no-op
+    assert store.claim_info(HASH)["owner"] == "bob"
+    store.release_claim(HASH, owner="bob")
+    assert store.claim_info(HASH) is None
 
 
 def test_claim_refused_once_artifact_exists(tmp_path):
@@ -152,6 +204,64 @@ def test_claims_in_memory_store():
     store.save_cell(HASH, {"x": 1})
     store.release_claim(HASH)
     assert not store.claim(HASH, "c")  # artifact exists
+
+
+# --------------------------------------------- exactly-once publication
+def test_publish_cell_exactly_once_and_success_log(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    assert store.claim(HASH, "alice")
+    assert store.publish_cell(HASH, {"run": {"front": []}}, "alice")
+    # A racing publisher (claim lost, artifact already there) discards.
+    assert not store.publish_cell(HASH, {"run": {"other": 1}}, "bob")
+    assert store.load_cell(HASH) == {"run": {"front": []}}
+    log = store.success_log()
+    assert [(r["spec"], r["owner"]) for r in log] == [(HASH, "alice")]
+
+
+def test_publish_cell_loses_to_takeover_owner(tmp_path):
+    """A hung worker whose claim was broken by a stale takeover must not
+    publish over the inheritor: its decode result is discarded."""
+    store = RunStore(str(tmp_path / "store"))
+    assert store.claim(HASH, "slow-worker")
+    _backdate_claim(store, HASH, 600)
+    assert store.claim(HASH, "inheritor", ttl_s=60)
+    assert not store.publish_cell(HASH, {"run": {}}, "slow-worker")
+    assert store.try_load_cell(HASH) is None
+    assert store.publish_cell(HASH, {"run": {}}, "inheritor")
+    assert len(store.success_log()) == 1
+
+
+def test_publish_cell_in_memory(tmp_path):
+    store = RunStore(None)
+    assert store.publish_cell(HASH, {"x": 1}, "a")
+    assert not store.publish_cell(HASH, {"x": 2}, "b")
+    assert store.success_log() == [{"owner": "a", "spec": HASH}]
+
+
+def test_sweep_stale_claims(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    done, stale, live = HASH, "b" * 64, "c" * 64
+    # A finished cell whose release was lost (claim + artifact coexist).
+    assert store.claim(done, "gone")
+    store.save_cell(done, {"run": {}})
+    # A dead owner nobody took over from.
+    assert store.claim(stale, "dead")
+    _backdate_claim(store, stale, 600)
+    # A live claim that must survive the sweep.
+    assert store.claim(live, "alive")
+    swept = store.sweep_stale_claims()  # no ttl: artifact-backed only
+    assert swept == [done]
+    swept = store.sweep_stale_claims(ttl_s=60)
+    assert swept == [stale]
+    assert store.claim_info(live)["owner"] == "alive"
+
+
+def test_success_log_skips_torn_trailing_line(tmp_path):
+    store = RunStore(str(tmp_path / "store"))
+    store.publish_cell(HASH, {"run": {}}, "a")
+    with open(os.path.join(str(tmp_path / "store"), "success.log"), "a") as f:
+        f.write('{"owner": "b", "spe')  # torn mid-record
+    assert [r["spec"] for r in store.success_log()] == [HASH]
 
 
 # ------------------------------------------------------------------- locks

@@ -345,6 +345,7 @@ def test_metrics_json_schema_pinned(served_inline):
     assert set(m["counters"]) == {
         "units_submitted", "units_done", "units_failed", "retries",
         "worker_restarts", "cells_executed", "cells_deduped",
+        "deadline_cancels",
     }
     assert set(m["tenants"]["alice"]) == {
         "queued_units", "running_units", "submitted_cells",
@@ -538,7 +539,9 @@ def test_cli_submit_unreachable_service_one_line(tmp_path, capsys):
     rc = cli_main(["campaign", "submit", str(spec),
                    "--url", "http://127.0.0.1:1", "--no-wait"])
     captured = capsys.readouterr()
-    assert rc == 2
+    # Unreachable is transient (the client already retried): exit 3, the
+    # "retry later" code, distinct from permanent errors' exit 2.
+    assert rc == 3
     assert captured.err.startswith("repro: error: ")
     assert "Traceback" not in captured.err
 
@@ -569,3 +572,132 @@ def test_local_runner_and_service_share_artifact_bytes(tmp_path):
         a = deterministic_bytes(local_store.load_cell(h))
         b = deterministic_bytes(view.load_cell(h))
         assert a == b, cell.tag
+
+
+# ====================================================== resilience (PR 9)
+from repro import faults  # noqa: E402 — resilience-section imports
+from repro.faults import FaultPlan, FaultRule  # noqa: E402
+from repro.service import QueueSaturated  # noqa: E402
+
+
+@pytest.fixture()
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def test_submit_backpressure_429_retry_after_and_cli_exit_3(
+    tmp_path, capsys, _clean_faults
+):
+    """queue_high_water=0 saturates instantly: raw HTTP sees 429 with a
+    Retry-After hint, the client raises a retryable ServiceError after
+    its budget, and the CLI maps it to exit code 3 with a one-line
+    diagnostic."""
+    server, service = make_server(
+        str(tmp_path / "svc"), workers=0, queue_high_water=0
+    )
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    host, port = server.server_address[:2]
+    url = f"http://{host}:{port}"
+    spec = tmp_path / "spec.json"
+    spec.write_text(tiny_campaign().dumps())
+    try:
+        with pytest.raises(QueueSaturated):
+            service.submit(tiny_campaign().to_json(), tenant="direct")
+        body = json.dumps(
+            {"campaign": tiny_campaign().to_json(), "tenant": "raw"}
+        ).encode()
+        req = urllib.request.Request(
+            url + "/campaigns", data=body,
+            headers={"Content-Type": "application/json"},
+        )
+        with pytest.raises(urllib.error.HTTPError) as raw:
+            urllib.request.urlopen(req, timeout=30)
+        assert raw.value.code == 429
+        assert float(raw.value.headers["Retry-After"]) > 0
+
+        client = ServiceClient(url, retries=1, backoff_base_s=0.01)
+        with pytest.raises(ServiceError) as e:
+            client.submit(tiny_campaign().to_json(), tenant="alice")
+        assert e.value.code == 429 and e.value.retryable
+
+        rc = cli_main(["campaign", "submit", str(spec), "--url", url,
+                       "--no-wait", "--timeout", "5"])
+        captured = capsys.readouterr()
+        assert rc == 3
+        assert captured.err.startswith("repro: error: ")
+        assert captured.err.strip().count("\n") == 0
+        assert "Traceback" not in captured.err + captured.out
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.close()
+
+
+def test_client_retries_through_injected_5xx_and_reset(served, _clean_faults):
+    """One injected server 503 and one injected client-side connection
+    reset are both absorbed by the retry loop — the call still
+    succeeds."""
+    faults.configure(FaultPlan(rules=[
+        FaultRule("http.request", "error_5xx", max_fires=1),
+        FaultRule("http.client", "reset", max_fires=1),
+    ]))
+    client = ServiceClient(
+        served.base_url, retries=3, backoff_base_s=0.01, backoff_max_s=0.05
+    )
+    assert client.healthz() == {"ok": True}
+    faults.configure(False)
+    assert client.healthz() == {"ok": True}
+
+
+def test_client_does_not_retry_permanent_4xx(served, _clean_faults):
+    t0 = time.monotonic()
+    client = ServiceClient(served.base_url, retries=3, backoff_base_s=0.5)
+    with pytest.raises(ServiceError) as e:
+        client.status("nope--missing")
+    assert e.value.code == 404 and not e.value.retryable
+    assert time.monotonic() - t0 < 0.5  # no backoff sleeps: failed fast
+
+
+def test_events_stream_reconnects_after_injected_reset(served, _clean_faults):
+    """A dropped event stream resumes from ?since=<cursor>: the client
+    re-yields nothing twice and loses nothing — the reconnected event
+    list is identical to a clean read."""
+    camp = tiny_campaign()
+    sub = served.submit(camp.to_json(), tenant="alice")
+    served.wait(sub["submission_id"], timeout_s=300)
+    clean = list(served.events(sub["submission_id"]))
+    assert clean  # the stream has real content to lose
+    client = ServiceClient(
+        served.base_url, retries=3, backoff_base_s=0.01, backoff_max_s=0.05
+    )
+    faults.configure(FaultPlan(rules=[
+        FaultRule("http.request", "reset", max_fires=2),
+    ]))
+    assert list(client.events(sub["submission_id"])) == clean
+
+
+def test_unit_deadline_cancels_wedged_unit(tmp_path, monkeypatch):
+    """A unit that heartbeats but never finishes (wedged decode) is
+    cancelled at unit_deadline_s by worker replacement, counted in
+    deadline_cancels, and announced with reason=unit_deadline."""
+    monkeypatch.setenv(CELL_DELAY_ENV, "30.0")
+    store = RunStore(str(tmp_path / "cells"))
+    events = []
+    cfg = SchedulerConfig(
+        heartbeat_timeout_s=60.0, unit_deadline_s=1.0, max_retries=0,
+    )
+    sched = Scheduler(store, workers=1, config=cfg, on_event=events.append).start()
+    try:
+        sched.submit("c1", "alice", [tiny_campaign().expand()])
+        _wait_for(lambda: any(e["type"] == "cell_started" for e in events))
+        assert sched.wait("c1", timeout_s=120)
+        state = sched.campaign_state("c1")
+        m = sched.metrics()
+    finally:
+        sched.close()
+    assert state["done"] and len(state["errors"]) == 1
+    assert m["counters"]["deadline_cancels"] >= 1
+    restarts = [e for e in events if e["type"] == "worker_restart"]
+    assert any(e["reason"] == "unit_deadline" for e in restarts)
