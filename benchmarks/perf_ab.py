@@ -8,6 +8,7 @@ Run (one experiment, ~2-10 min each):
   PYTHONPATH=src python -m benchmarks.perf_ab --exp dse_cache
   PYTHONPATH=src python -m benchmarks.perf_ab --exp sim_backends
   PYTHONPATH=src python -m benchmarks.perf_ab --exp service
+  PYTHONPATH=src python -m benchmarks.perf_ab --exp evo
 """
 import os
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -607,11 +608,132 @@ def service_ab(seeds: int = 3, workers: int = 2, repeats: int = 2):
     return results
 
 
+def evo_ab(population: int = 512, offspring: int = 256, generations: int = 5,
+           seed: int = 11):
+    """A/B the host ``nsga2`` generation loop against the device-resident
+    ``jax_nsga2`` (relaxed evaluation) on Sobel / paper24, Reference
+    strategy, at population ≥ 512 — the regime the ISSUE targets.
+
+    Per-generation wall times come from ``on_generation`` callback
+    timestamps, so both arms are measured by the same clock on exactly the
+    loop body (selection + variation + evaluation + truncation), with
+    archive/hypervolume post-processing excluded.  The jax arm reports
+    cold time-to-first-generation (init evaluation + generation 0, which
+    pays jit tracing + XLA compile of the fused step) and warm
+    per-generation wall (second explore on the same explorer instance —
+    compiled artifacts are cached per instance, so this is the
+    steady-state cost).  BENCH_evo.json keeps a ``history`` list — every
+    run appends the previous head — and the run *fails* (CI slow job)
+    when the warm speedup drops below the last recorded value by more
+    than 20% (set REPRO_BENCH_NO_GATE=1 to bypass).
+    """
+    import time as _time
+
+    from repro.core import (
+        ExplorationProblem,
+        get_explorer,
+        paper_architecture,
+        relative_hypervolume,
+        sobel,
+    )
+
+    g, arch = sobel(), paper_architecture()
+    problem = ExplorationProblem(graph=g, arch=arch, strategy="Reference")
+
+    def timed(explorer):
+        stamps = []
+        t0 = _time.monotonic()
+        run = explorer.explore(
+            problem,
+            on_generation=lambda gen, r: stamps.append(_time.monotonic()),
+        )
+        # ttfg = init evaluation + generation 0 (where the jax arm pays
+        # tracing + XLA compile); diffs = steady-state generation walls.
+        ttfg = stamps[0] - t0
+        return run, [b - a for a, b in zip(stamps, stamps[1:])], ttfg
+
+    cfg = dict(population=population, offspring=offspring,
+               generations=generations, seed=seed, track_hypervolume=False)
+    host = get_explorer("nsga2", **cfg)
+    dev = get_explorer("jax_nsga2", evaluation="relaxed", **cfg)
+
+    host_run, host_d, host_ttfg = timed(host)
+    cold_run, _, cold_ttfg = timed(dev)
+    warm_run, warm_d, warm_ttfg = timed(dev)  # same instance: compiled step reused
+
+    med = lambda xs: sorted(xs)[len(xs) // 2]  # noqa: E731
+    host_gen = med(host_d)
+    warm_gen = med(warm_d) if warm_d else warm_ttfg
+    speedups = {
+        "warm_vs_host": host_gen / warm_gen,
+        "ttfg_vs_host": host_ttfg / cold_ttfg,
+    }
+    relhv = relative_hypervolume(warm_run.front, host_run.front)
+    results = {
+        "host": {"gen_s": host_gen, "ttfg_s": host_ttfg,
+                 "front": len(host_run.front),
+                 "decodes": host_run.evaluations},
+        "jax_cold": {"ttfg_s": cold_ttfg, "front": len(cold_run.front)},
+        "jax_warm": {"gen_s": warm_gen, "ttfg_s": warm_ttfg,
+                     "front": len(warm_run.front),
+                     "relaxed_evaluations":
+                         warm_run.meta.get("relaxed_evaluations")},
+    }
+    print(f"host   gen={host_gen*1e3:8.1f} ms  front={len(host_run.front)}")
+    print(f"jax cold ttfg={cold_ttfg*1e3:8.1f} ms (incl. jit + compile)")
+    print(f"jax warm gen={warm_gen*1e3:8.1f} ms  front={len(warm_run.front)}")
+    print(f"generation throughput: {speedups['warm_vs_host']:.1f}x warm, "
+          f"{speedups['ttfg_vs_host']:.1f}x time-to-first-gen; "
+          f"relHV(jax, host)={relhv:.3f}")
+
+    bench_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_evo.json")
+    prev = None
+    try:
+        with open(bench_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        pass
+    history = list(prev.get("history", [])) if prev else []
+    if prev:
+        history.append({
+            "arms": prev.get("arms"),
+            "speedups": prev.get("speedups"),
+            "relhv": prev.get("relhv"),
+            "git_sha": prev.get("git_sha"),
+            "host": prev.get("host"),
+        })
+    bench = {
+        **bench_provenance(),
+        "experiment": "evo",
+        "config": dict(cfg, strategy="Reference", evaluation="relaxed"),
+        "arms": results,
+        "speedups": speedups,
+        "relhv": relhv,
+        "history": history[-24:],
+    }
+    # Regression gate: warm generation-throughput speedup must stay within
+    # 20% of the last recorded value; checked before the write so a
+    # regressed run never replaces the baseline it failed against.
+    if prev and not os.environ.get("REPRO_BENCH_NO_GATE"):
+        last_s = (prev.get("speedups") or {}).get("warm_vs_host")
+        if last_s and speedups["warm_vs_host"] < 0.8 * last_s:
+            raise SystemExit(
+                f"evo regression: warm speedup {speedups['warm_vs_host']:.2f}x "
+                f"dropped >20% below last recorded {last_s:.2f}x "
+                f"(BENCH_evo.json left unchanged)"
+            )
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(bench_path)}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--exp", required=True,
                     choices=["ce_mode", "microbatch", "decode_capacity",
-                             "dse_cache", "sim_backends", "service"])
+                             "dse_cache", "sim_backends", "service", "evo"])
     ap.add_argument("--arch", default="gemma2-9b")
     args = ap.parse_args()
 
@@ -623,6 +745,9 @@ def main():
         return
     if args.exp == "service":
         service_ab()
+        return
+    if args.exp == "evo":
+        evo_ab()
         return
 
     if args.exp == "ce_mode":

@@ -15,7 +15,8 @@ inspecting experiments (see README "Campaign API").
     python -m repro chaos run [--spec SPEC.json] [--plans N] [--seed S]
                               [--out DIR] [--workers N]
     python -m repro problem validate SPEC.json
-    python -m repro problem explore SPEC.json [--explorer nsga2]
+    python -m repro problem explore SPEC.json [--explorer nsga2|jax_nsga2|...]
+                                    [--strategy Reference|MRB_Always|MRB_Explore]
                                     [--params '{"generations": 8, ...}']
     python -m repro sim info
     python -m repro sim parity [--family stencil_chain] [--batch 8] [--seed 0]
@@ -283,7 +284,10 @@ def _cmd_problem_explore(args) -> int:
     from .core.problem import ExplorationProblem
 
     with open(args.spec) as f:
-        problem = ExplorationProblem.from_json(json.load(f))
+        spec = json.load(f)
+    if getattr(args, "strategy", ""):
+        spec["strategy"] = args.strategy
+    problem = ExplorationProblem.from_json(spec)
     params = json.loads(args.params) if args.params else {}
     explorer = get_explorer(args.explorer, **params)
     run = explorer.explore(problem)
@@ -543,6 +547,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = psub.add_parser("explore", help="run one exploration, save the run JSON")
     p.add_argument("spec")
     p.add_argument("--explorer", default="nsga2")
+    p.add_argument(
+        "--strategy",
+        default="",
+        help="override the spec's MRB strategy (Reference/MRB_Always/MRB_Explore)",
+    )
     p.add_argument("--params", default="", help="explorer kwargs as JSON")
     p.add_argument("--out", default="runs")
     p.set_defaults(fn=_cmd_problem_explore)

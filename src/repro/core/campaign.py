@@ -59,7 +59,7 @@ DEFAULT_CAMPAIGN_ROOT = os.path.join("runs", "campaigns")
 # Axis names a campaign matrix may sweep, in expansion order (the cross
 # product is taken in exactly this order, problems outermost, so cell
 # ordering — and hence the manifest — is deterministic).
-AXES = ("strategy", "decoder", "sim_backend", "seed")
+AXES = ("strategy", "decoder", "sim_backend", "seed", "explorer")
 
 
 # Engine kwargs that never change results, only wall time — excluded from
@@ -179,7 +179,9 @@ class Campaign:
     supplies them.
 
     ``axes`` — ``{"strategy": [...], "decoder": [...], "sim_backend":
-    [...], "seed": [...]}``; missing axes contribute a single implicit
+    [...], "seed": [...], "explorer": [...]}`` (an ``explorer`` axis value
+    replaces the campaign-level explorer for that cell, e.g. to A/B the
+    host ``nsga2`` against ``jax_nsga2``); missing axes contribute a single implicit
     cell coordinate (the template/explorer defaults).
 
     ``overrides`` — expansion rules applied per cell, in order::
@@ -341,6 +343,7 @@ class Campaign:
                 problem = dict(base_problem)
                 engine = dict(self.engine)
                 params = dict(self.explorer_params)
+                explorer = self.explorer
                 for axis, value in zip(AXES, combo):
                     if value is None and axis not in self.axes:
                         continue
@@ -351,6 +354,8 @@ class Campaign:
                         engine["sim_backend"] = value
                     elif axis == "seed":
                         params["seed"] = value
+                    elif axis == "explorer":
+                        explorer = value
                 skip = False
                 for ov in self.overrides:
                     if not self._matches(ov.get("match", {}), coords):
@@ -367,7 +372,7 @@ class Campaign:
                 cells.append(
                     CampaignCell(
                         problem=problem,
-                        explorer=self.explorer,
+                        explorer=explorer,
                         explorer_params=params,
                         engine=engine,
                         coords=coords,

@@ -197,8 +197,16 @@ def register_explorer(name: str) -> Callable[[Type], Type]:
     return deco
 
 
+def _load_plugin_explorers() -> None:
+    """Explorers living outside this module register on import; the
+    device-resident ``jax_nsga2`` (:mod:`repro.evo`) is deferred because
+    its subsystem is heavier than the registry itself."""
+    from .. import evo  # noqa: F401  (import side effect: registration)
+
+
 def get_explorer(name: str, **params) -> Explorer:
     """Instantiate a registered explorer by name."""
+    _load_plugin_explorers()
     try:
         cls = EXPLORERS[name]
     except KeyError:
@@ -209,6 +217,7 @@ def get_explorer(name: str, **params) -> Explorer:
 
 
 def explorer_names() -> List[str]:
+    _load_plugin_explorers()
     return sorted(EXPLORERS)
 
 

@@ -7,6 +7,7 @@ normalization to [0, 1]^d against a reference front).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Iterable, List, Sequence, Tuple
 
 __all__ = [
@@ -72,7 +73,18 @@ def fast_nondominated_sort(points: Sequence[Sequence[float]]) -> List[List[int]]
 
 
 def crowding_distance(points: Sequence[Sequence[float]], idx: Sequence[int]) -> Dict[int, float]:
-    """Crowding distance within one front (NSGA-II)."""
+    """Crowding distance within one front (NSGA-II).
+
+    ``inf`` coordinates (infeasibility markers, or objectives that diverge)
+    are well-defined: a front mixing finite and infinite values has an
+    infinite span, so an interior point contributes 0 for that objective
+    unless one of its neighbours is at ``inf`` and the other finite — then
+    it sits on the edge of the finite region and gets ``inf``, like a
+    boundary point.  Neighbours both at ``inf`` (duplicates at infinity)
+    contribute 0 rather than the IEEE ``inf - inf = nan``.  All-finite
+    fronts and zero-span objectives are untouched (bit-identical to the
+    historical behaviour).
+    """
     if not idx:
         return {}
     d = {i: 0.0 for i in idx}
@@ -83,8 +95,15 @@ def crowding_distance(points: Sequence[Sequence[float]], idx: Sequence[int]) -> 
         d[order[0]] = d[order[-1]] = float("inf")
         if hi == lo:
             continue
+        span = hi - lo
         for a, i in enumerate(order[1:-1], start=1):
-            d[i] += (points[order[a + 1]][k] - points[order[a - 1]][k]) / (hi - lo)
+            nxt, prv = points[order[a + 1]][k], points[order[a - 1]][k]
+            if math.isinf(span):
+                gap = nxt - prv
+                if math.isinf(gap):
+                    d[i] += float("inf")
+                continue
+            d[i] += (nxt - prv) / span
     return d
 
 
@@ -93,12 +112,20 @@ def normalize(
 ) -> List[Point]:
     """Normalize objective vectors to [0, 1]^d by the reference front's
     per-objective min/max (paper: both S_Ref and S normalized; values are
-    clipped so points worse than the reference extremes contribute 0)."""
+    clipped so points worse than the reference extremes contribute 0).
+
+    Non-finite reference coordinates are excluded from the per-objective
+    bounds (an ``inf`` extreme would make every finite value map to 0/NaN);
+    candidate coordinates at ``inf`` then clip to 1.0 like any
+    worse-than-reference value.  All-finite inputs are unchanged."""
     if not front:
         return []
     m = len(reference_front[0])
-    lo = [min(p[k] for p in reference_front) for k in range(m)]
-    hi = [max(p[k] for p in reference_front) for k in range(m)]
+    lo, hi = [], []
+    for k in range(m):
+        vals = [p[k] for p in reference_front if math.isfinite(p[k])]
+        lo.append(min(vals) if vals else 0.0)
+        hi.append(max(vals) if vals else 0.0)
     out = []
     for p in front:
         q = []
@@ -164,7 +191,18 @@ def relative_hypervolume(
     objective) give normalization nothing to scale by — every point maps to
     the origin and the ratio is 0/0-shaped.  We define the value instead:
     1.0 if the candidate front reaches (weakly dominates) the collapsed
-    reference point, else 0.0."""
+    reference point, else 0.0.
+
+    All-``inf`` objective vectors (the infeasibility marker of
+    :func:`repro.core.dse.infeasible_objectives`) are dropped from both
+    fronts before anything else — they carry no attainment information and
+    would otherwise poison the normalization bounds.  Partially-infinite
+    points keep their finite coordinates and clip to the normalization
+    boundary in the infinite ones (see :func:`normalize`)."""
+    front = [p for p in front if any(math.isfinite(v) for v in p)]
+    reference_front = [
+        p for p in reference_front if any(math.isfinite(v) for v in p)
+    ]
     if not reference_front:
         return 0.0
     d = len(reference_front[0])

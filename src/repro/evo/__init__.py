@@ -1,0 +1,19 @@
+"""Device-resident evolutionary subsystem: the ``jax_nsga2`` explorer.
+
+Populations as dense device arrays, NSGA-II ranking/variation as pure JAX
+ops, and a vmap-able list-scheduling relaxation of the caps_hms decode —
+fused with the PR 4 batched simulator into a single jitted generation
+step.  See DESIGN.md §12 and the module docstrings:
+
+* :mod:`repro.evo.encoding` — gene matrix layout (ξ | C_d | β_A);
+* :mod:`repro.evo.ranking`  — bit-exact device non-dominated sort + crowding;
+* :mod:`repro.evo.decode`   — per-ξ-pattern relaxed decode→simulate tables;
+* :mod:`repro.evo.variation`— tournament / crossover / mutation;
+* :mod:`repro.evo.explorer` — the registered explorer (exact + relaxed paths).
+
+Importing this package registers ``jax_nsga2`` in the explorer registry.
+"""
+from .encoding import PopulationLayout
+from .explorer import JaxNSGA2Explorer
+
+__all__ = ["PopulationLayout", "JaxNSGA2Explorer"]

@@ -1,0 +1,92 @@
+"""Population variation as pure JAX ops (relaxed device-resident path).
+
+Mirrors the host explorer's operators over the dense gene matrix of
+:class:`repro.evo.encoding.PopulationLayout` — binary tournament on
+(rank, −crowding), uniform crossover at a whole-child rate, per-gene
+resampling mutation at rate 1/G — but drives them from the counter-based
+JAX PRNG instead of the host Mersenne Twister.  The exact-parity path
+never calls into this module (bit-identical fronts require replaying the
+host ``random.Random`` draw sequence, which a counter-based PRNG cannot
+do); these operators are for the fully device-resident loop, whose
+contract is relative-hypervolume equivalence, not bitwise equality.
+
+All functions take an explicit PRNG key and are shape-polymorphic only in
+the population axis, so the explorer can fuse them into the jitted
+generation step.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "init_population",
+    "tournament_pick",
+    "uniform_crossover",
+    "mutate",
+]
+
+
+def _jr():
+    import jax
+
+    return jax, jax.numpy, jax.random
+
+
+def init_population(key, n: int, bounds, forced_mask=None, forced_vals=None):
+    """Uniform random population: gene g ~ U[0, bounds[g]) — (n, G) int32.
+    ``forced_mask``/``forced_vals`` pin strategy-fixed genes (forced ξ)."""
+    _, jnp, jrandom = _jr()
+    bounds = jnp.asarray(bounds, jnp.int32)
+    u = jrandom.uniform(key, (n, bounds.shape[0]))
+    genes = jnp.floor(u * bounds[None, :]).astype(jnp.int32)
+    genes = jnp.minimum(genes, bounds[None, :] - 1)
+    if forced_mask is not None:
+        genes = jnp.where(
+            jnp.asarray(forced_mask)[None, :],
+            jnp.asarray(forced_vals, jnp.int32)[None, :],
+            genes,
+        )
+    return genes
+
+
+def tournament_pick(key, ranks, crowd, count: int):
+    """``count`` binary tournaments over a population of ``ranks.shape[0]``:
+    each draws two uniform indices and keeps the lexicographically better
+    (rank, −crowding) — ties keep the first draw, like the host's ``<=``."""
+    _, jnp, jrandom = _jr()
+    n = ranks.shape[0]
+    ij = jrandom.randint(key, (2, count), 0, n)
+    i, j = ij[0], ij[1]
+    better = (ranks[i] < ranks[j]) | (
+        (ranks[i] == ranks[j]) & (crowd[i] >= crowd[j])
+    )
+    return jnp.where(better, i, j)
+
+
+def uniform_crossover(key, pa, pb, rate: float):
+    """Whole-child crossover gate at ``rate``; crossed children take each
+    gene from either parent with probability ½, otherwise they clone the
+    first parent — the host operator, vectorized."""
+    _, jnp, jrandom = _jr()
+    k_gate, k_mix = jrandom.split(key)
+    n, g = pa.shape
+    do_cx = jrandom.uniform(k_gate, (n, 1)) < rate
+    take_a = jrandom.uniform(k_mix, (n, g)) < 0.5
+    mixed = jnp.where(take_a, pa, pb)
+    return jnp.where(do_cx, mixed, pa)
+
+
+def mutate(key, genes, bounds, mut_mask=None):
+    """Per-gene resampling mutation at rate 1/G (the host rate): a mutated
+    gene redraws uniformly from [0, bound) — possibly its old value, as on
+    host.  ``mut_mask`` excludes strategy-fixed genes (forced ξ)."""
+    _, jnp, jrandom = _jr()
+    k_hit, k_val = jrandom.split(key)
+    n, g = genes.shape
+    bounds = jnp.asarray(bounds, jnp.int32)
+    hit = jrandom.uniform(k_hit, (n, g)) < (1.0 / g)
+    if mut_mask is not None:
+        hit = hit & jnp.asarray(mut_mask)[None, :]
+    u = jrandom.uniform(k_val, (n, g))
+    new = jnp.minimum(
+        jnp.floor(u * bounds[None, :]).astype(jnp.int32), bounds[None, :] - 1
+    )
+    return jnp.where(hit, new, genes)

@@ -273,6 +273,18 @@ def _lower_batch(progs: Sequence[SimProgram]):
     return static, batched
 
 
+def lower_structure(prog: SimProgram):
+    """Public seam over :func:`_lower_batch` for a single program: returns
+    ``(static, batched)`` where ``static`` holds the graph-derived
+    segment-packed structure tables (shareable across any binding of the
+    same transformed graph) and ``batched`` the program's own
+    binding-derived arrays with a leading batch axis of 1.  The
+    device-resident evolutionary decode (:mod:`repro.evo.decode`) lowers
+    one representative phenotype per ξ pattern this way, then synthesizes
+    the batched arrays *on device* from genotype matrices."""
+    return _lower_batch([prog])
+
+
 # --------------------------------------------------------------- simulator
 def build_simulate_one(static, ports: Optional[int], k_max: int):
     """Single-phenotype simulator for one structure: a pure JAX function
@@ -336,8 +348,8 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             # windows — the all-zero one-hot then yields don't-care
             # fields, gated out by in_w everywhere.
             cur_oh = t_iota[None, :] == cur[:, None]               # (A,Tmax)
-            ts = jnp.sum(jnp.where(cur_oh[:, :, None], ts_tab, 0), axis=1)
-            tbv = jnp.sum(jnp.where(cur_oh[:, :, None], tb, 0), axis=1)
+            ts = jnp.sum(jnp.where(cur_oh[:, :, None], ts_tab, 0), axis=1, dtype=jnp.int32)
+            tbv = jnp.sum(jnp.where(cur_oh[:, :, None], tb, 0), axis=1, dtype=jnp.int32)
             d = {}
             d["is_read"] = ts[:, 0] > 0                            # (A,)
             d["is_write"] = ts[:, 1] > 0
@@ -349,14 +361,14 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             d["cs_mask"] = c_oh[:, :, None] & s_oh[:, None, :]     # (A,C,R)
             d["timed"] = d["dur_t"] > 0
             d["gamma_c"] = jnp.maximum(
-                jnp.sum(jnp.where(c_oh, gamma[None], 0), axis=1), 1
+                jnp.sum(jnp.where(c_oh, gamma[None], 0), axis=1, dtype=jnp.int32), 1
             )
             return d
 
         def read_adv(cs_mask, gamma_c, avail, rho):
             # Each reader's post-read ρ view (−1 when its window empties).
-            avail_t = jnp.sum(jnp.where(cs_mask, avail[None], 0), axis=(1, 2))
-            rho_cs = jnp.sum(jnp.where(cs_mask, rho[None], 0), axis=(1, 2))
+            avail_t = jnp.sum(jnp.where(cs_mask, avail[None], 0), axis=(1, 2), dtype=jnp.int32)
+            rho_cs = jnp.sum(jnp.where(cs_mask, rho[None], 0), axis=(1, 2), dtype=jnp.int32)
             return avail_t, jnp.where(
                 avail_t == 1, NEG, (rho_cs + 1) % gamma_c
             )
@@ -365,7 +377,7 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             m = who[:, None, None] & cs_mask                       # (A,C,R)
             return jnp.where(
                 jnp.any(m, axis=0),
-                jnp.sum(jnp.where(m, rho_adv[:, None, None], 0), axis=0),
+                jnp.sum(jnp.where(m, rho_adv[:, None, None], 0), axis=0, dtype=jnp.int32),
                 rho,
             )
 
@@ -400,7 +412,8 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             due = running & (busy <= t)
             running = running & ~due
             active = active - jnp.sum(
-                (due[:, None] & run_coh).astype(jnp.int32), axis=0
+                (due[:, None] & run_coh).astype(jnp.int32), axis=0,
+                dtype=jnp.int32,
             )
             _, rho_adv = read_adv(run_cs, run_gc, avail_of(omega, rho), rho)
             rho = apply_reads(run_cs, due & run_read, rho_adv, rho)
@@ -413,7 +426,7 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             # competes in the same round.
             avail = avail_of(omega, rho)
             free = gamma - jnp.max(jnp.where(reader_mask, avail, 0), axis=1)
-            owner_of = jnp.sum(jnp.where(core_oh, owner[None], 0), axis=1)
+            owner_of = jnp.sum(jnp.where(core_oh, owner[None], 0), axis=1, dtype=jnp.int32)
             in_bad = jnp.any(inmask & (avail[None] < 1), axis=(1, 2))
             out_bad = jnp.any(outmask & (free[None] < 1), axis=1)
             fire_cand = (
@@ -427,7 +440,8 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             )
             claimed = jnp.any(fire_win[:, None] & core_oh, axis=0)
             claim_idx = jnp.sum(
-                jnp.where(fire_win[:, None] & core_oh, aidx[:, None], 0), axis=0
+                jnp.where(fire_win[:, None] & core_oh, aidx[:, None], 0),
+                axis=0, dtype=jnp.int32,
             )
             owner = jnp.where(claimed, claim_idx, owner)
             in_w = in_w | fire_win
@@ -442,7 +456,7 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
                 d["c_oh"], d["route_t"], d["timed"], d["dur_t"]
             )
             avail_t, rho_adv = read_adv(d["cs_mask"], d["gamma_c"], avail, rho)
-            free_c = jnp.sum(jnp.where(c_oh, free[None], 0), axis=1)
+            free_c = jnp.sum(jnp.where(c_oh, free[None], 0), axis=1, dtype=jnp.int32)
             cand = (
                 (in_w & ~running)
                 & (~is_read | (avail_t >= 1))
@@ -457,9 +471,9 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
                 same_c = jnp.any(c_oh[:, None, :] & c_oh[None, :, :], axis=2)
                 rank = jnp.sum(
                     (lower_tri & chan_cand[None, :] & same_c).astype(jnp.int32),
-                    axis=1,
+                    axis=1, dtype=jnp.int32,
                 )
-                active_c = jnp.sum(jnp.where(c_oh, active[None], 0), axis=1)
+                active_c = jnp.sum(jnp.where(c_oh, active[None], 0), axis=1, dtype=jnp.int32)
                 surv = cand & (~chan_cand | (active_c + rank < ports))
             # A start is deferred (next round, same t) when a higher-
             # priority surviving timed candidate shares an interconnect.
@@ -480,10 +494,12 @@ def build_simulate_one(static, ports: Optional[int], k_max: int):
             ic_claim = tw[:, None] & route_t                       # (A,H)
             ic_busy = jnp.where(
                 jnp.any(ic_claim, axis=0),
-                jnp.sum(jnp.where(ic_claim, (t + dur_t)[:, None], 0), axis=0),
+                jnp.sum(jnp.where(ic_claim, (t + dur_t)[:, None], 0), axis=0, dtype=jnp.int32),
                 ic_busy,
             )
-            active = active + jnp.sum((tw[:, None] & c_oh).astype(jnp.int32), axis=0)
+            active = active + jnp.sum(
+                (tw[:, None] & c_oh).astype(jnp.int32), axis=0, dtype=jnp.int32
+            )
             # Record the started tasks' descriptor fields for their
             # completion phase (only timed tasks with a channel matter;
             # the port decrement is gated by run_coh, zero when none).

@@ -139,3 +139,51 @@ def test_relative_hypervolume_partial_degeneracy_is_finite():
     ref = [(1.0, 0.0), (1.0, 10.0)]  # first objective has zero span
     v = relative_hypervolume([(1.0, 5.0)], ref)
     assert 0.0 <= v <= 1.0 and not math.isnan(v)
+
+
+# ------------------------------------------------------------ inf handling
+def test_crowding_distance_mixed_inf_no_nan():
+    """A front mixing finite and inf coords: the span is infinite, so the
+    interior contributes 0 unless it borders the finite region — never nan
+    (IEEE inf - inf)."""
+    pts = [(0.0, 3.0), (1.0, 2.0), (math.inf, 1.0), (math.inf, 0.0)]
+    d = crowding_distance(pts, [0, 1, 2, 3])
+    assert not any(math.isnan(v) for v in d.values())
+    assert math.isinf(d[0]) and math.isinf(d[3])  # boundaries
+    # point 1 borders the finite edge of an infinite span: inf, not nan
+    assert math.isinf(d[1])
+
+
+def test_crowding_distance_duplicate_inf_interior_zero():
+    pts = [(0.0,), (math.inf,), (math.inf,), (math.inf,)]
+    d = crowding_distance(pts, [0, 1, 2, 3])
+    assert not any(math.isnan(v) for v in d.values())
+    # an interior point with both neighbours at inf contributes 0
+    assert any(v == 0.0 for v in d.values())
+
+
+def test_relative_hypervolume_drops_infeasible_marker_points():
+    """All-inf vectors (the infeasibility marker) must not poison the
+    normalization bounds on either side."""
+    inf2 = (math.inf, math.inf)
+    ref = [(1.0, 3.0), (3.0, 1.0), inf2]
+    assert relative_hypervolume([(1.0, 3.0), (3.0, 1.0)], ref) == pytest.approx(
+        relative_hypervolume([(1.0, 3.0), (3.0, 1.0), inf2], [(1.0, 3.0), (3.0, 1.0)])
+    )
+    v = relative_hypervolume([(1.0, 3.0), inf2], ref)
+    assert 0.0 < v <= 1.0 and math.isfinite(v)
+    # a front of only infeasible markers attains nothing
+    assert relative_hypervolume([inf2], ref) == 0.0
+    assert relative_hypervolume([(1.0, 3.0)], [inf2]) == 0.0
+
+
+def test_relative_hypervolume_partially_infinite_points_clip():
+    ref = [(1.0, 3.0), (3.0, 1.0)]
+    # a partially-infinite point dominated in its finite region adds nothing
+    full = relative_hypervolume([(1.0, 1.0)], ref)
+    mixed = relative_hypervolume([(1.0, 1.0), (math.inf, 2.0)], ref)
+    assert mixed == pytest.approx(full)
+    # alone, it clips to the normalization boundary in the infinite
+    # objective but keeps the attainment of its finite one — finite, not nan
+    solo = relative_hypervolume([(math.inf, 2.0)], ref)
+    assert math.isfinite(solo) and 0.0 < solo < full
